@@ -1,0 +1,96 @@
+"""Roofline table generator: experiments/dryrun/*.json -> markdown.
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI. Terms (per device == per chip, post-SPMD HLO):
+    compute    = flops / 197e12
+    memory     = hbm_bytes / 819e9
+    collective = coll_bytes / 50e9
+MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per chip for train cells;
+forward-only cells use 2*N*D. The useful-fraction column flags remat/
+replication waste. Usage:
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh sp|mp]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def model_flops_per_chip(arch: str, shape_name: str, chips: int) -> float:
+    from repro.configs.registry import get_config
+    from repro.configs.shapes import SHAPES
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.seq_len * shape.global_batch
+        mult = 6
+    elif shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        mult = 2
+    else:  # decode: one token per sequence
+        tokens = shape.global_batch
+        mult = 2
+    return mult * n * tokens / chips
+
+
+def load_rows(mesh_tag: str):
+    rows = []
+    for f in sorted(glob.glob(f"experiments/dryrun/*__{mesh_tag}.json")):
+        r = json.load(open(f))
+        rows.append(r)
+    return rows
+
+
+def render(mesh_tag: str = "sp", fmt: str = "md"):
+    chips = 256 if mesh_tag == "sp" else 512
+    rows = load_rows(mesh_tag)
+    out = []
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL_FLOPS/HLO | temp GB | fits | note |")
+    out.append(hdr)
+    out.append("|" + "---|" * 10)
+    for r in rows:
+        if r["status"] == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — |"
+                       f" — | — | SKIP: {r['reason']} |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — |"
+                       f" — | — | {r['status']} |")
+            continue
+        h = r["hlo_cost"]
+        ct = h["flops"] / PEAK_FLOPS
+        mt = h["hbm_bytes"] / HBM_BW
+        lt = h["coll_bytes"] / ICI_BW
+        dom = max((("compute", ct), ("memory", mt), ("collective", lt)),
+                  key=lambda x: x[1])[0]
+        mf = model_flops_per_chip(r["arch"], r["shape"], chips)
+        useful = mf / max(h["flops"], 1)
+        temp = r["memory"]["temp_size_in_bytes"] / 1e9
+        args = r["memory"]["argument_size_in_bytes"] / 1e9
+        fits = "yes" if (temp + args) < 17.18 else f"NO ({temp+args:.0f}GB)"  # 16 GiB HBM
+        mb = r.get("microbatch", 0)
+        note = f"mb={mb}" if mb and mb > 1 else ""
+        if r.get("overrides"):
+            note += f" {r['overrides']}"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {ct:.3f} | {mt:.3f} | {lt:.3f} "
+            f"| {dom} | {useful:.2f} | {temp:.1f} | {fits} | {note} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="sp", choices=("sp", "mp"))
+    args = ap.parse_args()
+    print(render(args.mesh))
+
+
+if __name__ == "__main__":
+    main()

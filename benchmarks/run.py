@@ -1,0 +1,196 @@
+"""Benchmark harness — one function per paper table/claim.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the quantity the
+paper's table/theorem is about). Run: PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+import repro.core as C
+import repro.kernels as K
+
+
+def _timeit(fn, n=5):
+    fn()  # warmup/compile
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(n):
+        out = fn()
+    if out is not None:
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6  # us
+
+
+def bench_example_2_1_pps_table():
+    """Paper Example 2.1: pps probabilities for sum/thresh/cap, k=3."""
+    w = np.array([5, 100, 23, 7, 1, 5, 220, 19, 3, 2], np.float32)
+    act = np.ones(10, bool)
+    us = _timeit(lambda: [C.pps_probabilities(w, act, f, 3)[0]
+                          for f in (C.SUM, C.thresh(10), C.cap(5))][0])
+    p_sum, s = C.pps_probabilities(w, act, C.SUM, 3)
+    print(f"example_2_1_pps_table,{us:.1f},total_sum={float(s):g}")
+
+
+def bench_example_3_1_multiobjective_size():
+    """Paper Example 3.1: E|S^(F)| vs naive union of dedicated samples."""
+    w = np.array([5, 100, 23, 7, 1, 5, 220, 19, 3, 2], np.float32)
+    act = np.ones(10, bool)
+    objs = [(C.SUM, 3), (C.thresh(10), 3), (C.cap(5), 3)]
+
+    def run():
+        probs = [C.pps_probabilities(w, act, f, k)[0] for f, k in objs]
+        return jnp.stack(probs).max(0).sum(), sum(p.sum() for p in probs)
+    us = _timeit(lambda: run()[0])
+    e_sf, naive = run()
+    print(f"example_3_1_multiobjective_size,{us:.1f},"
+          f"E_SF={float(e_sf):.3f};naive={float(naive):.3f};paper=4.68/8.29")
+
+
+def bench_thm_5_1_universal_size():
+    """Thm 5.1: E|S^(M,k)| <= k ln n (+ Thm 5.2 lower bound shape)."""
+    k = 16
+    rows = []
+    for n in (1_000, 10_000, 100_000):
+        keys = np.arange(n, dtype=np.int32)
+        w = np.random.default_rng(0).lognormal(0, 2, n).astype(np.float32)
+        act = np.ones(n, bool)
+        sizes = [int(C.universal_monotone_sample(keys, w, act, k,
+                                                 seed=s).member.sum())
+                 for s in range(8)]
+        us = _timeit(lambda: C.universal_monotone_sample(keys, w, act, k,
+                                                         seed=0).member)
+        bound = k * math.log(n)
+        lower = k * (math.log(n) - math.log(k))  # Thm 5.2 Omega(k ln n)
+        rows.append((n, np.mean(sizes), bound, lower, us))
+        print(f"thm5_1_universal_size_n{n},{us:.1f},"
+              f"mean={np.mean(sizes):.1f};kln_n={bound:.1f};"
+              f"lower={lower:.1f}")
+    g1 = rows[1][1] / rows[0][1]
+    g2 = rows[2][1] / rows[1][1]
+    print(f"thm5_1_log_growth,0.0,size_ratio_per_10x={g1:.2f}/{g2:.2f}"
+          f";expected_if_log={math.log(10_000)/math.log(1_000):.2f}")
+
+
+def bench_thm_6_1_capping_size():
+    """Thm 6.1: E|S^(C,k)| <= e k ln(w_max/w_min), independent of n."""
+    k = 16
+    rng = np.random.default_rng(1)
+    for n in (1_000, 10_000, 100_000):
+        keys = np.arange(n, dtype=np.int32)
+        w = np.clip(rng.lognormal(0, 1.0, n), 0.1, 10.0).astype(np.float32)
+        act = np.ones(n, bool)
+        sizes = [int(C.universal_capping_sample(
+            keys, w, act, k, m_cap=4096, seed=s).member.sum())
+            for s in range(5)]
+        us = _timeit(lambda: C.universal_capping_sample(
+            keys, w, act, k, m_cap=4096, seed=0).member)
+        bound = C.capping_size_bound(k, 10.0, 0.1)
+        print(f"thm6_1_capping_size_n{n},{us:.1f},"
+              f"mean={np.mean(sizes):.1f};bound={bound:.1f}")
+
+
+def bench_thm_3_1_estimation_cv():
+    """Thm 3.1/§5.1: empirical CV vs gold-standard bound per f (segment)."""
+    n, k, trials = 2_000, 24, 200
+    rng = np.random.default_rng(2)
+    keys = np.arange(n, dtype=np.int32)
+    w = rng.lognormal(0, 1.5, n).astype(np.float32)
+    act = np.ones(n, bool)
+    seg = (np.arange(n) % 4 == 0)
+    for f in [C.SUM, C.COUNT, C.thresh(3.0), C.cap(2.0), C.moment(1.5)]:
+        t0 = time.perf_counter()
+        ests = [float(C.estimate(f, w, s.prob, s.member, seg))
+                for s in (C.universal_monotone_sample(keys, w, act, k, seed=i)
+                          for i in range(trials))]
+        us = (time.perf_counter() - t0) * 1e6 / trials
+        ex = float(C.exact(f, w, act, seg))
+        q = ex / float(C.exact(f, w, act))
+        cv = float(np.std(ests) / ex)
+        bound = C.cv_bound(q, k)
+        print(f"thm3_1_cv_{f.name},{us:.1f},"
+              f"cv={cv:.3f};bound={bound:.3f};ok={cv <= bound}")
+
+
+def bench_sampling_throughput():
+    """Production sort+scan vs fused kernels (keys/s)."""
+    n, k = 65_536, 64
+    rng = np.random.default_rng(3)
+    keys = np.arange(n, dtype=np.int32)
+    w = rng.lognormal(0, 1.5, n).astype(np.float32)
+    act = np.ones(n, bool)
+    us_prod = _timeit(lambda: C.universal_monotone_sample(
+        keys, w, act, k, seed=0).member)
+    print(f"throughput_universal_sortscan,{us_prod:.1f},"
+          f"keys_per_s={n/us_prod*1e6:.3g}")
+    objs = ((0, 0.0), (3, 2.0), (1, 0.0))
+    us_k = _timeit(lambda: K.ops.multi_objective_bottomk_kernel(
+        jnp.asarray(keys), jnp.asarray(w), jnp.asarray(act), objs, k)[0])
+    print(f"throughput_multiobj_kernel,{us_k:.1f},"
+          f"keys_per_s={n/us_k*1e6:.3g};note=interpret_mode_cpu")
+
+
+def bench_merge_throughput():
+    """Composability cost: sketch merge (paper §5.2) at fixed capacity."""
+    n, k = 16_384, 32
+    rng = np.random.default_rng(4)
+    keys = np.arange(n, dtype=np.int32)
+    w = rng.lognormal(0, 1.5, n).astype(np.float32)
+    act = np.ones(n, bool)
+    cap_sz = C.sketch_capacity(n, k)
+    a = C.build_sketch(keys[:n // 2], w[:n // 2], act[:n // 2], k, cap_sz, 0)
+    b = C.build_sketch(keys[n // 2:], w[n // 2:], act[n // 2:], k, cap_sz, 0)
+    us = _timeit(lambda: C.merge_sketches(a, b).member)
+    print(f"merge_sketches,{us:.1f},capacity={cap_sz}")
+
+
+def bench_gradient_compression():
+    """distopt: wire bytes vs dense, and estimate quality."""
+    from repro.distopt.compression import _sample_leaf, _merge_leaf
+    n, k = 262_144, 512
+    rng = np.random.default_rng(5)
+    g = (rng.standard_normal(n) * (rng.random(n) < 0.3)).astype(np.float32)
+    us = _timeit(lambda: _sample_leaf(jnp.asarray(g), k, 7, 0.01)[0])
+    idx, val, prob, valid = _sample_leaf(jnp.asarray(g), k, 7, 0.01)
+    wire = int(idx.size) * (4 + 4 + 4)
+    dense = n * 4
+    est = _merge_leaf(idx[None], val[None], prob[None], valid[None], n, 1)
+    rel = float(jnp.linalg.norm(est - g) / jnp.linalg.norm(g))
+    dots = float(jnp.dot(est, g) / jnp.dot(g, g))
+    print(f"grad_compression,{us:.1f},ratio={dense/wire:.1f}x;"
+          f"l2rel={rel:.3f};proj={dots:.3f}")
+
+
+def bench_dryrun_roofline_summary():
+    """Ties to EXPERIMENTS.md §Roofline: summarize dry-run artifacts."""
+    import glob
+    import json
+    for mesh in ("sp", "mp"):
+        cells = ok = 0
+        for f in glob.glob(f"experiments/dryrun/*__{mesh}.json"):
+            r = json.load(open(f))
+            cells += 1
+            ok += r.get("status") in ("ok", "skipped")
+        print(f"dryrun_cells_{mesh},0.0,total={cells};ok_or_skipped={ok}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    bench_example_2_1_pps_table()
+    bench_example_3_1_multiobjective_size()
+    bench_thm_5_1_universal_size()
+    bench_thm_6_1_capping_size()
+    bench_thm_3_1_estimation_cv()
+    bench_sampling_throughput()
+    bench_merge_throughput()
+    bench_gradient_compression()
+    bench_dryrun_roofline_summary()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""Serve a small model with batched requests (prefill + decode loop).
+
+    PYTHONPATH=src python examples/serve_batched.py [--arch zamba2-2.7b]
+
+Uses the same serve_step the decode_32k / long_500k dry-run cells lower —
+including the SSM/hybrid recurrent-state path.
+"""
+import argparse
+import sys
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="zamba2-2.7b")
+    args, _ = ap.parse_known_args()
+    sys.argv = [sys.argv[0]]
+    serve_main(["--arch", args.arch, "--smoke", "--batch", "4",
+                "--prompt-len", "32", "--gen", "16"])

@@ -1,0 +1,37 @@
+"""Core library: multi-objective weighted sampling (Cohen 2015).
+
+Public API re-exports for the paper's primary contribution (C1-C9, DESIGN.md).
+"""
+from .funcs import COUNT, SUM, StatFn, cap, combo, disparity, moment, thresh
+from .hashing import hash_u32, ppswor_rank, rank_of, uniform01
+from .pps import PpsSample, pps_probabilities, pps_sample
+from .bottomk import BottomK, bottomk_sample, conditional_prob, f_seed
+from .multi_objective import (MultiBottomK, MultiPps, multi_bottomk_sample,
+                              multi_pps_sample)
+from .universal import (UniversalSample, expected_size_bound,
+                        universal_monotone_ref, universal_monotone_sample)
+from .capping import (CappingSample, capping_size_bound, universal_capping_ref,
+                      universal_capping_sample)
+from .estimators import (cv_bound, estimate, estimate_segments, exact,
+                         exact_segments)
+from .merge import (Sketch, build_sketch, merge_many, merge_sketches,
+                    sketch_capacity, sketch_estimate)
+from .metric_domains import (MetricSample, estimate_ball_density,
+                             estimate_centrality, universal_metric_sample)
+
+__all__ = [
+    "StatFn", "COUNT", "SUM", "cap", "thresh", "moment", "combo", "disparity",
+    "hash_u32", "uniform01", "ppswor_rank", "rank_of",
+    "PpsSample", "pps_probabilities", "pps_sample",
+    "BottomK", "bottomk_sample", "conditional_prob", "f_seed",
+    "MultiPps", "MultiBottomK", "multi_pps_sample", "multi_bottomk_sample",
+    "UniversalSample", "universal_monotone_ref", "universal_monotone_sample",
+    "expected_size_bound",
+    "CappingSample", "universal_capping_ref", "universal_capping_sample",
+    "capping_size_bound",
+    "estimate", "estimate_segments", "exact", "exact_segments", "cv_bound",
+    "Sketch", "build_sketch", "merge_sketches", "merge_many",
+    "sketch_capacity", "sketch_estimate",
+    "MetricSample", "universal_metric_sample", "estimate_centrality",
+    "estimate_ball_density",
+]

@@ -1,0 +1,70 @@
+"""Bottom-k (order) sampling: priority and ppswor (paper §2.2–§2.3).
+
+f-seed(x) = r_x / f(w_x); the sample is the k keys with smallest f-seed and
+the retained threshold tau = (k+1)-th smallest f-seed. Conditional inclusion
+probabilities (paper Eq. 3):
+    priority: p_x = min(1, f(w_x) * tau)
+    ppswor:   p_x = 1 - exp(-f(w_x) * tau)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .funcs import StatFn
+from .hashing import rank_of, uniform01
+
+_INF = jnp.float32(jnp.inf)
+
+
+def f_seed(weights, active, f: StatFn, u, scheme: str):
+    """f-seed(x) = r_x / f(w_x); inactive or f(w)=0 keys get seed = +inf."""
+    r = rank_of(u, scheme)
+    fv = f(weights)
+    ok = active & (fv > 0)
+    return jnp.where(ok, r / jnp.maximum(fv, 1e-30), _INF)
+
+
+class BottomK(NamedTuple):
+    member: jnp.ndarray   # bool [n] — x in S (the k smallest f-seeds)
+    prob: jnp.ndarray     # float32 [n] — conditional p_x for members, else 0
+    tau: jnp.ndarray      # float32 [] — (k+1)-th smallest f-seed
+    seeds: jnp.ndarray    # float32 [n] — the f-seeds (inf for inactive)
+
+
+def _kth_smallest(x, k: int):
+    """k-th smallest (1-indexed) of x, +inf if fewer than k finite entries."""
+    neg_topk = jax.lax.top_k(-x, k)[0]
+    return -neg_topk[k - 1]
+
+
+def conditional_prob(fv, tau, scheme: str):
+    """Eq. (3): Pr_{u~U[0,1]}[r/f(w) < tau]."""
+    t = jnp.maximum(fv, 0.0) * tau
+    if scheme == "priority":
+        return jnp.minimum(1.0, t)
+    # ppswor; tau may be +inf (fewer than k+1 active keys) -> p = 1.
+    return jnp.where(jnp.isinf(t), 1.0, -jnp.expm1(-t))
+
+
+def bottomk_sample(keys, weights, active, f: StatFn, k: int, scheme: str = "ppswor",
+                   seed=0) -> BottomK:
+    """Bottom-k sample w.r.t. f, with conditional inclusion probabilities.
+
+    For member x the k-th smallest f-seed among OTHER keys equals tau (the
+    global (k+1)-th smallest), which is exactly the conditioning the paper
+    uses (§2.3).
+    """
+    u = uniform01(keys, seed)
+    seeds = f_seed(weights, active, f, u, scheme)
+    n = seeds.shape[0]
+    kk = min(k, n)
+    kth = _kth_smallest(seeds, kk)
+    member = (seeds < kth) | ((seeds == kth) & jnp.isfinite(seeds))
+    # tau = (k+1)-th smallest seed; +inf when fewer than k+1 finite seeds.
+    tau = _kth_smallest(seeds, kk + 1) if n > kk else _INF
+    fv = jnp.where(active, f(weights), 0.0)
+    p = jnp.where(member, conditional_prob(fv, tau, scheme), 0.0)
+    return BottomK(member=member, prob=p, tau=tau, seeds=seeds)

@@ -1,0 +1,113 @@
+"""Statistic functions f for segment f-statistics Q(f, H) = sum_{x in H} f(w_x).
+
+The paper (Cohen 2015, §1) considers functions f >= 0 with f(0) = 0. We make
+them first-class, hashable, jit-static objects so sampling routines can be
+specialized per objective set F under ``jax.jit``.
+
+Families implemented (paper §1 examples):
+  count     f(w) = 1 for w > 0
+  sum       f(w) = w
+  thresh_T  f(w) = 1 for w >= T else 0
+  cap_T     f(w) = min(T, w)
+  moment_p  f(w) = w ** p
+  linear combinations  f = sum_i a_i g_i  (closure, paper §4)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class StatFn:
+    """A statistic function f(w). Frozen/hashable => usable as a jit-static arg.
+
+    kind: one of {"count", "sum", "thresh", "cap", "moment", "combo"}.
+    param: scalar parameter (T for thresh/cap, p for moment).
+    terms: for kind == "combo", tuple of (coef, StatFn) pairs.
+    """
+
+    kind: str
+    param: float = 0.0
+    terms: Tuple[Tuple[float, "StatFn"], ...] = ()
+
+    def __call__(self, w):
+        w = jnp.asarray(w)
+        if self.kind == "count":
+            return (w > 0).astype(jnp.float32)
+        if self.kind == "sum":
+            return w.astype(jnp.float32)
+        if self.kind == "thresh":
+            return (w >= self.param).astype(jnp.float32)
+        if self.kind == "cap":
+            return jnp.minimum(w, self.param).astype(jnp.float32)
+        if self.kind == "moment":
+            # w**p with f(0) = 0 enforced (0**p is fine for p>0 but guard p<1
+            # numerical paths).
+            wf = w.astype(jnp.float32)
+            return jnp.where(wf > 0, jnp.power(jnp.maximum(wf, 1e-30), self.param), 0.0)
+        if self.kind == "combo":
+            out = jnp.zeros(w.shape, jnp.float32)
+            for coef, g in self.terms:
+                out = out + jnp.float32(coef) * g(w)
+            return out
+        raise ValueError(f"unknown StatFn kind: {self.kind}")
+
+    @property
+    def name(self) -> str:
+        if self.kind in ("count", "sum"):
+            return self.kind
+        if self.kind == "thresh":
+            return f"thresh_{self.param:g}"
+        if self.kind == "cap":
+            return f"cap_{self.param:g}"
+        if self.kind == "moment":
+            return f"moment_{self.param:g}"
+        return "combo(" + "+".join(f"{c:g}*{g.name}" for c, g in self.terms) + ")"
+
+    def is_monotone(self) -> bool:
+        """All the families above are monotone non-decreasing (paper §5 M)."""
+        if self.kind == "combo":
+            return all(c >= 0 and g.is_monotone() for c, g in self.terms)
+        return True
+
+
+COUNT = StatFn("count")
+SUM = StatFn("sum")
+
+
+def thresh(T: float) -> StatFn:
+    return StatFn("thresh", float(T))
+
+
+def cap(T: float) -> StatFn:
+    return StatFn("cap", float(T))
+
+
+def moment(p: float) -> StatFn:
+    return StatFn("moment", float(p))
+
+
+def combo(*terms: Tuple[float, StatFn]) -> StatFn:
+    """Non-negative linear combination sum_i a_i g_i (paper Thm 4.1)."""
+    for coef, _ in terms:
+        if coef < 0:
+            raise ValueError("closure (Thm 4.1) requires non-negative coefficients")
+    return StatFn("combo", 0.0, tuple((float(c), g) for c, g in terms))
+
+
+def disparity(f: StatFn, g: StatFn, w_grid) -> jnp.ndarray:
+    """rho(f,g) = max_w f/g * max_w g/f over a weight grid (paper §2.4).
+
+    Evaluated numerically on ``w_grid`` (w > 0); rho >= 1 with equality iff
+    g = c f on the grid.
+    """
+    w = jnp.asarray(w_grid, jnp.float32)
+    fv = f(w)
+    gv = g(w)
+    ok = (fv > 0) & (gv > 0)
+    r1 = jnp.max(jnp.where(ok, fv / jnp.maximum(gv, 1e-30), 0.0))
+    r2 = jnp.max(jnp.where(ok, gv / jnp.maximum(fv, 1e-30), 0.0))
+    return r1 * r2

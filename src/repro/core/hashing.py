@@ -1,0 +1,61 @@
+"""Shared randomization u_x via counter-based hashing.
+
+Coordinated samples (paper §1, §3) require that every objective — and every
+shard of a distributed computation — sees the SAME u_x for key x. We therefore
+derive u_x from a stateless integer hash of (key, seed), not from stateful
+RNG. Any worker on any pod reproduces u_x without communication, which is what
+makes sample composition (paper §2.5/§5.2) correct under `jax.lax` collectives.
+
+We use a splitmix32-style finalizer in uint32 arithmetic (JAX-friendly: no
+x64 requirement), two rounds keyed by the seed.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_GOLDEN = jnp.uint32(0x9E3779B9)
+
+
+def _mix(h):
+    """fmix32 finalizer from MurmurHash3 — full avalanche on uint32."""
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def hash_u32(keys, seed: int | jnp.ndarray = 0):
+    """uint32 hash of integer keys, keyed by seed."""
+    k = jnp.asarray(keys).astype(jnp.uint32)
+    s = jnp.asarray(seed).astype(jnp.uint32)
+    h = _mix(k + _GOLDEN + s)
+    h = _mix(h ^ (s * jnp.uint32(0x85EBCA6B) + jnp.uint32(1)))
+    return h
+
+
+def uniform01(keys, seed: int | jnp.ndarray = 0):
+    """u_x ~ U[0,1) from key hash — in (0, 1) exclusive of exact 0.
+
+    24 high bits -> float32 mantissa-exact uniform; shifted by half-ulp so
+    u > 0 strictly (r = -log1p(-u) and seeds r/f(w) stay finite/positive).
+    """
+    h = hash_u32(keys, seed)
+    # take top 24 bits -> [0, 2^24), scale to (0,1)
+    u = (h >> jnp.uint32(8)).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+    return u + jnp.float32(0.5 / (1 << 24))
+
+
+def ppswor_rank(u):
+    """r_x = -ln(1 - u_x): Exp(1) rank for ppswor (paper §2.2)."""
+    return -jnp.log1p(-jnp.asarray(u, jnp.float32))
+
+
+def rank_of(u, scheme: str):
+    """r_x per bottom-k scheme: 'priority' -> u; 'ppswor' -> -ln(1-u)."""
+    if scheme == "priority":
+        return jnp.asarray(u, jnp.float32)
+    if scheme == "ppswor":
+        return ppswor_rank(u)
+    raise ValueError(f"unknown scheme {scheme!r} (want 'priority' or 'ppswor')")

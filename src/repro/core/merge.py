@@ -1,0 +1,107 @@
+"""Mergeable fixed-capacity sketches (paper §2.5, §3.3, §5.2 composability).
+
+A ``Sketch`` is the wire/state format of a universal monotone sample: a
+fixed-capacity array of (key, weight, u) triples covering S ∪ Z plus validity
+bits. Fixed capacity makes sketches jit-compatible and collective-friendly:
+merging across shards is an ``all_gather`` + re-selection, and merging across
+time (streaming) is a concat + re-selection. Both are EXACT: the paper proves
+S∪Z of a union is contained in the union of the parts' S∪Z sets, so
+re-running selection on concatenated retained keys reproduces the sample the
+union data set would have produced.
+
+u_x comes from the shared hash (core.hashing), so the same key sampled on two
+shards carries the same u — the coordination requirement.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .hashing import uniform01
+from .universal import UniversalSample, universal_monotone_sample
+
+_INF = jnp.float32(jnp.inf)
+
+
+class Sketch(NamedTuple):
+    keys: jnp.ndarray     # int32 [c] — key ids (-1 for empty slots)
+    weights: jnp.ndarray  # float32 [c]
+    probs: jnp.ndarray    # float32 [c] — p(w) for members (0 otherwise)
+    member: jnp.ndarray   # bool [c] — in S (vs auxiliary-only in Z)
+    valid: jnp.ndarray    # bool [c]
+    k: int                # sample-size parameter (static)
+    seed: int             # hash seed (static; must match to merge)
+
+
+def sketch_capacity(n_hint: int, k: int) -> int:
+    """Suggested capacity ~ 2 k ln n (Thm 5.1 bound + slack for Z)."""
+    import math
+    return int(2 * k * max(2.0, math.log(max(n_hint, 4))) + 2 * k)
+
+
+def build_sketch(keys, weights, active, k: int, capacity: int,
+                 seed: int = 0) -> Sketch:
+    """Compute S^(M,k) over a batch and compact S ∪ Z into a Sketch."""
+    s = universal_monotone_sample(keys, weights, active, k, seed=seed)
+    return _compact(keys, weights, s, k, capacity, seed)
+
+
+def _compact(keys, weights, s: UniversalSample, k: int, capacity: int,
+             seed: int) -> Sketch:
+    keep = s.member | s.aux
+    # order: kept first (members before aux), then by weight desc
+    order = jnp.lexsort((-jnp.asarray(weights, jnp.float32), ~s.member, ~keep))
+    n = order.shape[0]
+    if n < capacity:  # pad so every sketch carries exactly `capacity` slots
+        order = jnp.concatenate([order, jnp.zeros(capacity - n, order.dtype)])
+        pad_valid = jnp.arange(capacity) < n
+    else:
+        order = order[:capacity]
+        pad_valid = jnp.ones((capacity,), bool)
+    take = order
+    kk = jnp.asarray(keys, jnp.int32)[take]
+    keep_t = keep[take] & pad_valid
+    return Sketch(
+        keys=jnp.where(keep_t, kk, -1),
+        weights=jnp.where(keep_t, jnp.asarray(weights, jnp.float32)[take],
+                          0.0),
+        probs=jnp.where(keep_t, s.prob[take], 0.0),
+        member=s.member[take] & keep_t,
+        valid=keep_t,
+        k=k, seed=seed)
+
+
+def merge_sketches(a: Sketch, b: Sketch) -> Sketch:
+    """Merge two sketches (same k/seed): concat, dedup (keep max weight),
+    re-select. Exact per paper §5.2."""
+    assert a.k == b.k and a.seed == b.seed, "sketches must share k and hash seed"
+    keys = jnp.concatenate([a.keys, b.keys])
+    weights = jnp.concatenate([a.weights, b.weights])
+    valid = jnp.concatenate([a.valid, b.valid])
+    return _rebuild(keys, weights, valid, a.k, a.keys.shape[0], a.seed)
+
+
+def merge_many(sketches_keys, sketches_weights, sketches_valid, k: int,
+               capacity: int, seed: int) -> Sketch:
+    """Merge a stacked batch of sketches [m, c] -> one sketch (tree-free,
+    single re-selection). Used after all_gather over the mesh."""
+    return _rebuild(sketches_keys.reshape(-1), sketches_weights.reshape(-1),
+                    sketches_valid.reshape(-1), k, capacity, seed)
+
+
+def _rebuild(keys, weights, valid, k: int, capacity: int, seed: int) -> Sketch:
+    # dedup by key keeping max weight (paper: w_x = max over elements)
+    order = jnp.lexsort((-weights, keys))
+    sk, sw, sv = keys[order], weights[order], valid[order]
+    dup = jnp.concatenate([jnp.zeros((1,), bool), sk[1:] == sk[:-1]])
+    act = sv & ~dup & (sk >= 0)
+    s = universal_monotone_sample(sk, sw, act, k, seed=seed)
+    return _compact(sk, sw, s, k, capacity, seed)
+
+
+def sketch_estimate(sk: Sketch, f) -> jnp.ndarray:
+    """HT estimate of Q(f, X) from a sketch."""
+    contrib = jnp.where(sk.member, f(sk.weights) / jnp.maximum(sk.probs, 1e-30), 0.0)
+    return jnp.sum(contrib)

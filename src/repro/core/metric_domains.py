@@ -1,0 +1,89 @@
+"""Metric-domain universal samples (paper §7).
+
+For points X in a metric space and query-indexed objective families
+    f_q(x) = d(q, x)^mu        (centrality / average-distance queries)
+    f_{q,r}(x) = 1[d(q,x) <= r]  (ball density)
+a universal sample must provide gold-standard estimates for EVERY query
+point q simultaneously. Following Chechik–Cohen–Kaplan (paper [6]), we
+compute sampling probabilities p_x that upper-bound the per-query pps
+probabilities using a small set of anchor points: for anchors A and any q,
+triangle inequality gives d(q,x)^mu <= 2^mu (d(q,a)^mu + d(a,x)^mu), so
+p_x = min(1, k * max_a overline{p}_x^{(a)}) with a constant-factor size
+overhead (independent of |X|) — the "(i) size overhead, (ii) efficiency"
+program of §7.
+
+Estimates: Q^(f_q, H) = sum_{x in S ∩ H} f_q(x) / p_x (HT, Eq. 2) — for
+centrality sum_{x} d(q,x)^mu and for ball density |B(q,r) ∩ X|.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hashing import uniform01
+
+
+class MetricSample(NamedTuple):
+    member: jnp.ndarray   # bool [n]
+    prob: jnp.ndarray     # float32 [n] — query-uniform upper-bound probs
+    anchors: jnp.ndarray  # int32 [m] — anchor indices
+
+
+def _pairwise_dist(X, Y):
+    d2 = (jnp.sum(X * X, 1)[:, None] + jnp.sum(Y * Y, 1)[None, :]
+          - 2 * X @ Y.T)
+    return jnp.sqrt(jnp.maximum(d2, 0.0))
+
+
+def universal_metric_sample(X, k: int, mu: float = 1.0, n_anchors: int = 8,
+                            seed: int = 0) -> MetricSample:
+    """One sample serving f_q(x) = d(q,x)^mu for ALL queries q.
+
+    X: [n, dim] points. Anchors are a greedy 2-approx k-center net (farthest
+    point traversal) — the 'few distance queries' construction of §7.
+    """
+    X = jnp.asarray(X, jnp.float32)
+    n = X.shape[0]
+    # farthest-point anchors
+    anchors = [0]
+    d_min = _pairwise_dist(X, X[:1]).reshape(-1)
+    for _ in range(n_anchors - 1):
+        nxt = int(jnp.argmax(d_min))
+        anchors.append(nxt)
+        d_min = jnp.minimum(d_min, _pairwise_dist(X, X[nxt:nxt + 1]).reshape(-1))
+    A = jnp.asarray(anchors, jnp.int32)
+
+    # per-anchor pps probabilities for f_a(x) = (d(a,x)+eps)^mu; the max over
+    # anchors upper-bounds (up to the triangle-inequality constant) the pps
+    # probability for every query q
+    D = _pairwise_dist(X, X[A])                     # [n, m]
+    eps = jnp.mean(D) * 1e-3 + 1e-12
+    fv = jnp.power(D + eps, mu)                     # [n, m]
+    p_a = fv / jnp.sum(fv, axis=0, keepdims=True)   # per-anchor pps
+    p = jnp.minimum(1.0, (2.0 ** mu) * k * jnp.max(p_a, axis=1))
+    u = uniform01(jnp.arange(n, dtype=jnp.int32), seed)
+    return MetricSample(member=(u < p), prob=p, anchors=A)
+
+
+def estimate_centrality(sample: MetricSample, X, q, mu: float = 1.0):
+    """HT estimate of sum_x d(q, x)^mu from the universal sample."""
+    X = jnp.asarray(X, jnp.float32)
+    q = jnp.asarray(q, jnp.float32).reshape(1, -1)
+    d = _pairwise_dist(X, q).reshape(-1)
+    contrib = jnp.where(sample.member,
+                        jnp.power(d, mu) / jnp.maximum(sample.prob, 1e-30),
+                        0.0)
+    return jnp.sum(contrib)
+
+
+def estimate_ball_density(sample: MetricSample, X, q, r: float):
+    """HT estimate of |{x : d(q,x) <= r}| from the same sample."""
+    X = jnp.asarray(X, jnp.float32)
+    q = jnp.asarray(q, jnp.float32).reshape(1, -1)
+    d = _pairwise_dist(X, q).reshape(-1)
+    contrib = jnp.where(sample.member & (d <= r),
+                        1.0 / jnp.maximum(sample.prob, 1e-30), 0.0)
+    return jnp.sum(contrib)

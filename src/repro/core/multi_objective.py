@@ -1,0 +1,102 @@
+"""Multi-objective samples S^(F) (paper §3).
+
+PPS (§3.1):     p_x^(F) = max_{(f,k_f) in F} p_x^(f,k_f)            (Eq. 4)
+Bottom-k (§3.2): S^(F) = U_f S^(f,k_f) under SHARED u_x; estimation uses the
+conditional inclusion probability p_x^(F) = max_f p_x^(f), with the auxiliary
+key set Z retained so the probabilities are computable from the sample alone.
+
+Estimates from S^(F) dominate every dedicated sample simultaneously
+(Thm 3.1): CV[Q^(g,H)] <= min_f sqrt(rho(f,g) / (q^(g)(H) k_f)).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from .bottomk import _kth_smallest, conditional_prob, f_seed
+from .funcs import StatFn
+from .hashing import uniform01
+from .pps import pps_probabilities
+
+
+class MultiPps(NamedTuple):
+    member: jnp.ndarray  # bool [n]
+    prob: jnp.ndarray    # float32 [n] — p_x^(F)
+    fsums: jnp.ndarray   # float32 [|F|] — auxiliary per-objective totals
+
+
+def multi_pps_sample(keys, weights, active, objectives: Sequence[Tuple[StatFn, int]],
+                     seed=0) -> MultiPps:
+    """Multi-objective pps sample (Eq. 4), coordinated via shared u_x."""
+    probs = []
+    fsums = []
+    for f, kf in objectives:
+        p, s = pps_probabilities(weights, active, f, kf)
+        probs.append(p)
+        fsums.append(s)
+    p_F = jnp.stack(probs).max(axis=0)
+    u = uniform01(keys, seed)
+    return MultiPps(member=(u < p_F), prob=p_F, fsums=jnp.stack(fsums))
+
+
+class MultiBottomK(NamedTuple):
+    member: jnp.ndarray   # bool [n] — x in S^(F) = union of dedicated samples
+    prob: jnp.ndarray     # float32 [n] — p_x^(F) = max_f p_x^(f) for members
+    aux: jnp.ndarray      # bool [n] — x in Z (auxiliary; carries (u_x, w_x))
+    taus: jnp.ndarray     # float32 [|F|] — tau^(f,k_f) per objective
+
+
+def multi_bottomk_sample(keys, weights, active,
+                         objectives: Sequence[Tuple[StatFn, int]],
+                         scheme: str = "ppswor", seed=0) -> MultiBottomK:
+    """Multi-objective bottom-k sample S^(F) with aux keys Z (paper §3.2).
+
+    All per-objective samples share the same u_x (coordination). For each
+    objective (f, k_f):
+      member_f(x): f-seed(x) among k_f smallest
+      tau_f = (k_f+1)-th smallest f-seed  (threshold key = the arg of tau_f)
+    Z collects, for each member x, the threshold key y_x of its most forgiving
+    objective g_x — keys that are needed to recompute p_x^(F) from the sample
+    but are not themselves members.
+    """
+    u = uniform01(keys, seed)
+    n = weights.shape[0]
+
+    member = jnp.zeros((n,), bool)
+    probs = []
+    taus = []
+    thr_key_onehots = []  # one-hot of the threshold key per objective
+    members_f = []
+    for f, kf in objectives:
+        seeds = f_seed(weights, active, f, u, scheme)
+        kk = min(kf, n)
+        kth = _kth_smallest(seeds, kk)
+        m_f = (seeds < kth) | ((seeds == kth) & jnp.isfinite(seeds))
+        tau_f = _kth_smallest(seeds, kk + 1) if n > kk else jnp.float32(jnp.inf)
+        fv = jnp.where(active, f(weights), 0.0)
+        p_f = jnp.where(m_f, conditional_prob(fv, tau_f, scheme), 0.0)
+        member = member | m_f
+        probs.append(p_f)
+        taus.append(tau_f)
+        members_f.append(m_f)
+        # threshold key of objective f: the key whose seed == tau_f
+        thr_key_onehots.append(jnp.isfinite(tau_f) & (seeds == tau_f))
+
+    probs = jnp.stack(probs)            # [|F|, n]
+    p_F = probs.max(axis=0)
+    # g_x = argmax_f p_x^(f) among objectives with x in S^(f) — since p_f is 0
+    # for non-members of f, the plain argmax implements the paper's g_x.
+    g_x = probs.argmax(axis=0)          # [n]
+    # Z = {y_x : x in S^(F), p_x^(g_x) < 1} \ S^(F): union of threshold keys of
+    # objectives that are "g_x" for at least one member with p < 1.
+    needed_f = jnp.zeros((len(objectives),), bool)
+    member_needs = member & (p_F < 1.0)
+    for i in range(len(objectives)):
+        needed_f = needed_f.at[i].set(jnp.any(member_needs & (g_x == i)))
+    aux = jnp.zeros((n,), bool)
+    for i, oh in enumerate(thr_key_onehots):
+        aux = aux | (oh & needed_f[i])
+    aux = aux & ~member
+    return MultiBottomK(member=member, prob=jnp.where(member, p_F, 0.0),
+                        aux=aux, taus=jnp.stack(taus))

@@ -1,0 +1,46 @@
+"""Poisson probability-proportional-to-size (pps) sampling (paper §2.1).
+
+Fixed-shape batch API: a data set is (keys, weights, active) arrays where
+``active`` masks live entries (inactive slots behave as w_x = 0). All
+functions are jit-compatible with k and f static.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .funcs import StatFn
+from .hashing import uniform01
+
+
+class PpsSample(NamedTuple):
+    """pps sample: inclusion mask + per-key probs + the auxiliary total sum.
+
+    The total ``fsum`` is the auxiliary information the paper (§2.3) attaches
+    to the sample so inverse-probability weights can be recomputed downstream.
+    """
+
+    member: jnp.ndarray  # bool [n] — x in S
+    prob: jnp.ndarray    # float32 [n] — p_x (0 for inactive keys)
+    fsum: jnp.ndarray    # float32 [] — sum_x f(w_x)
+
+
+def pps_probabilities(weights, active, f: StatFn, k: int):
+    """p_x = min(1, k f(w_x) / sum_y f(w_y))   (paper Eq. 1)."""
+    fv = jnp.where(active, f(weights), 0.0)
+    fsum = jnp.sum(fv)
+    p = jnp.minimum(1.0, k * fv / jnp.maximum(fsum, 1e-30))
+    return jnp.where(active & (fv > 0), p, 0.0), fsum
+
+
+def pps_sample(keys, weights, active, f: StatFn, k: int, seed=0) -> PpsSample:
+    """Independent inclusion with probability p_x^(f,k).
+
+    Uses the shared hash u_x (coordination across objectives, paper §3):
+    x is included iff u_x < p_x. Coordinated pps samples for different f are
+    nested exactly as the multi-objective construction (Eq. 4) requires.
+    """
+    p, fsum = pps_probabilities(weights, active, f, k)
+    u = uniform01(keys, seed)
+    return PpsSample(member=(u < p), prob=p, fsum=fsum)

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot spots (DESIGN.md §3).
+
+Each kernel: <name>.py (pl.pallas_call + BlockSpec), validated in
+interpret=True mode against the pure-jnp oracle in ref.py; ops.py exposes
+the jit'd compositions.
+"""
+from .seeds import fused_seeds
+from .rankcount import rank_counts
+from .blockselect import block_bottomk, bottomk_select
+from . import ops, ref
+
+__all__ = ["fused_seeds", "rank_counts", "block_bottomk", "bottomk_select",
+           "ops", "ref"]

@@ -1,0 +1,68 @@
+"""High-level jit'd entry points composing the Pallas kernels into the
+paper's sampling operations. On a real TPU set interpret=False; on CPU the
+kernels run in interpret mode (same program, python-evaluated)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bottomk import conditional_prob
+from repro.core.hashing import rank_of, uniform01
+from .blockselect import bottomk_select
+from .rankcount import rank_counts
+from .seeds import fused_seeds
+
+# objective encoding for the seeds kernel
+SUM, COUNT, THRESH, CAP, MOMENT = 0, 1, 2, 3, 4
+
+
+@partial(jax.jit, static_argnames=("objectives", "k", "scheme", "seed",
+                                   "interpret"))
+def multi_objective_bottomk_kernel(keys, weights, active, objectives,
+                                   k: int, scheme="ppswor", seed=0,
+                                   interpret=True):
+    """Multi-objective bottom-k sample S^(F) via the fused kernels.
+
+    Returns (member [n] bool, prob [n] float32) — same semantics as
+    core.multi_objective.multi_bottomk_sample (member/prob only).
+    """
+    n = keys.shape[0]
+    seeds = fused_seeds(keys, weights, active, objectives, scheme, seed,
+                        interpret=interpret)                  # [F, n]
+    member = jnp.zeros((n,), bool)
+    prob = jnp.zeros((n,), jnp.float32)
+    for j, (kind, param) in enumerate(objectives):
+        vals, idx, tau = bottomk_select(seeds[j], k, interpret=interpret)
+        m = jnp.zeros((n,), bool).at[jnp.where(idx >= 0, idx, n)].set(
+            True, mode="drop")
+        from repro.core.funcs import StatFn
+        kindname = {0: "sum", 1: "count", 2: "thresh", 3: "cap",
+                    4: "moment"}[kind]
+        f = StatFn(kindname, float(param))
+        fv = jnp.where(active, f(jnp.asarray(weights, jnp.float32)), 0.0)
+        p = jnp.where(m, conditional_prob(fv, tau, scheme), 0.0)
+        member = member | m
+        prob = jnp.maximum(prob, p)
+    return member, prob
+
+
+@partial(jax.jit, static_argnames=("k", "scheme", "seed", "interpret"))
+def universal_capping_kernel(keys, weights, active, k: int, scheme="ppswor",
+                             seed=0, interpret=True):
+    """S^(C,k) membership via the blocked rank-count kernel (Lemma 6.3).
+
+    Returns (member, hl) — membership exact; probabilities follow the
+    candidate pass of core.capping (host side, |candidates| x |candidates|).
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    act = jnp.asarray(active, bool) & (w > 0)
+    u = uniform01(keys, seed)
+    r = rank_of(u, scheme)
+    rw = jnp.where(act, r / jnp.maximum(w, 1e-30), jnp.float32(jnp.inf))
+    # h uses u as the order statistic; l uses r/w  (DESIGN.md §3)
+    h, l = rank_counts(jnp.where(act, w, 0.0), u, rw, act,
+                       interpret=interpret)
+    hl = h + l
+    return act & (hl < k), jnp.minimum(hl, k + 1)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every kernel in this package (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.funcs import StatFn
+from repro.core.hashing import rank_of, uniform01
+
+_KIND_TO_STATFN = {0: ("sum",), 1: ("count",), 2: ("thresh",),
+                   3: ("cap",), 4: ("moment",)}
+
+
+def fused_seeds_ref(keys, weights, active, objectives, scheme="ppswor",
+                    seed=0):
+    """Oracle for kernels.seeds.fused_seeds."""
+    u = uniform01(keys, seed)
+    r = rank_of(u, scheme)
+    act = jnp.asarray(active, bool)
+    out = []
+    for kind, param in objectives:
+        f = StatFn(_KIND_TO_STATFN[kind][0], float(param))
+        fv = f(jnp.asarray(weights, jnp.float32))
+        ok = act & (fv > 0)
+        out.append(jnp.where(ok, r / jnp.maximum(fv, 1e-30),
+                             jnp.float32(jnp.inf)))
+    return jnp.stack(out)
+
+
+def rank_counts_ref(weights, s_h, s_l, active):
+    """Oracle for kernels.rankcount.rank_counts. O(n^2)."""
+    w = jnp.asarray(weights, jnp.float32)
+    sh = jnp.asarray(s_h, jnp.float32)
+    sl = jnp.asarray(s_l, jnp.float32)
+    act = jnp.asarray(active, bool)
+    pair_h = (act[None, :] & act[:, None] & (sh[None, :] < sh[:, None]))
+    pair_l = (act[None, :] & act[:, None] & (sl[None, :] < sl[:, None]))
+    h = jnp.sum(pair_h & (w[None, :] >= w[:, None]), axis=1)
+    l = jnp.sum(pair_l & (w[None, :] < w[:, None]), axis=1)
+    return h.astype(jnp.int32), l.astype(jnp.int32)
+
+
+def block_bottomk_ref(seeds, k: int, block: int):
+    """Oracle for kernels.blockselect.block_bottomk."""
+    n = seeds.shape[0]
+    nb = n // block
+    s = jnp.asarray(seeds, jnp.float32).reshape(nb, block)
+    neg, pos = jax.lax.top_k(-s, k)
+    vals = -neg
+    idx = pos + (jnp.arange(nb) * block)[:, None]
+    idx = jnp.where(jnp.isfinite(vals), idx, -1)
+    return vals.reshape(-1), idx.reshape(-1).astype(jnp.int32)
+
+
+def bottomk_select_ref(seeds, k: int):
+    """Oracle for kernels.blockselect.bottomk_select (exact global)."""
+    n = seeds.shape[0]
+    neg, idx = jax.lax.top_k(-jnp.asarray(seeds, jnp.float32),
+                             min(k + 1, n))
+    vals = -neg
+    tau = vals[k] if n > k else jnp.float32(jnp.inf)
+    iv = jnp.where(jnp.isfinite(vals[:k]), idx[:k], -1)
+    return vals[:k], iv.astype(jnp.int32), tau

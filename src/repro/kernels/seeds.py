@@ -1,0 +1,92 @@
+"""Fused f-seed computation kernel (paper §2.2 hot loop).
+
+Computing a multi-objective sample applies |F| functions to every element
+(paper §3.3: Omega(|F| n) lower bound). The reference path materializes
+u_x, r_x and each f(w_x) in HBM separately; this kernel fuses
+hash -> u -> r -> { r / f_j(w) } for all objectives into one VMEM-resident
+pass: each (8x128-aligned) block of keys/weights is read once from HBM and
+|F| seed rows are written once — the arithmetic-intensity fix for what is
+otherwise a purely bandwidth-bound loop.
+
+Objectives are compiled in as (kind, param) pairs: kind 0=sum, 1=count,
+2=thresh(T), 3=cap(T), 4=moment(p).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+_GOLDEN = np.uint32(0x9E3779B9)  # numpy scalars fold into the kernel
+BLOCK = 1024  # 8 sublanes x 128 lanes
+
+
+def _mix(h):
+    h = h ^ (h >> 16)
+    h = h * np.uint32(0x85EBCA6B)
+    h = h ^ (h >> 13)
+    h = h * np.uint32(0xC2B2AE35)
+    h = h ^ (h >> 16)
+    return h
+
+
+def _fval(kind: int, param: float, w):
+    if kind == 0:
+        return w
+    if kind == 1:
+        return (w > 0).astype(jnp.float32)
+    if kind == 2:
+        return (w >= param).astype(jnp.float32)
+    if kind == 3:
+        return jnp.minimum(w, param)
+    return jnp.where(w > 0, jnp.power(jnp.maximum(w, 1e-30), param), 0.0)
+
+
+def _seeds_kernel(keys_ref, w_ref, act_ref, out_ref, *, objectives,
+                  scheme: str, seed: int):
+    k = keys_ref[...].astype(jnp.uint32)
+    w = w_ref[...].astype(jnp.float32)
+    act = act_ref[...] != 0
+    c1 = np.uint32((0x9E3779B9 + seed) & 0xFFFFFFFF)
+    c2 = np.uint32((seed * 0x85EBCA6B + 1) & 0xFFFFFFFF)
+    h = _mix(k + c1)
+    h = _mix(h ^ c2)
+    u = (h >> np.uint32(8)).astype(jnp.float32) * np.float32(1.0 / (1 << 24))
+    u = u + np.float32(0.5 / (1 << 24))
+    r = -jnp.log1p(-u) if scheme == "ppswor" else u
+    for j, (kind, param) in enumerate(objectives):
+        fv = _fval(kind, param, w)
+        ok = act & (fv > 0)
+        out_ref[j, :] = jnp.where(ok, r / jnp.maximum(fv, 1e-30),
+                                  jnp.float32(jnp.inf))
+
+
+@partial(jax.jit, static_argnames=("objectives", "scheme", "seed",
+                                   "interpret"))
+def fused_seeds(keys, weights, active, objectives, scheme="ppswor", seed=0,
+                interpret=True):
+    """keys,(weights,active): [n] -> seeds [|F|, n]. n must divide BLOCK.
+
+    objectives: tuple of (kind:int, param:float).
+    """
+    n = keys.shape[0]
+    assert n % BLOCK == 0, f"n={n} must be a multiple of {BLOCK}"
+    nf = len(objectives)
+    grid = (n // BLOCK,)
+    return pl.pallas_call(
+        partial(_seeds_kernel, objectives=tuple(objectives), scheme=scheme,
+                seed=seed),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((nf, BLOCK), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((nf, n), jnp.float32),
+        interpret=interpret,
+    )(keys.astype(jnp.int32), weights.astype(jnp.float32),
+      active.astype(jnp.int32))

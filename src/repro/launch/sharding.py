@@ -1,0 +1,128 @@
+"""Logical-axis -> mesh-axis mapping (partition rules).
+
+Model code declares per-dimension LOGICAL axes ("embed", "q_heads", "mlp",
+"vocab", "expert", "inner", ...). This module maps them to physical mesh axes
+with divisibility gating: a dimension is sharded on "model" only when its
+size divides evenly — otherwise it is replicated (recorded for the roofline
+notes; XLA padding of uneven shards is avoided by construction).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# logical axes that map to the tensor-parallel ("model") mesh axis
+_MODEL_AXES = ("q_heads", "kv_heads", "mlp", "vocab", "expert", "inner")
+
+
+def _is_spec(x):
+    return isinstance(x, tuple) and all(isinstance(a, (str, type(None)))
+                                        for a in x)
+
+
+def map_spec_tree(fn, spec_tree):
+    return jax.tree.map(fn, spec_tree, is_leaf=_is_spec)
+
+
+def logical_to_pspec(spec: tuple, shape: tuple, mesh, fsdp: bool = False) -> P:
+    """One param's logical spec + shape -> PartitionSpec on this mesh.
+
+    fsdp=True additionally shards the largest remaining divisible dim over
+    "data" (ZeRO-3 semantics: GSPMD inserts the per-layer all-gathers).
+    """
+    msize = mesh.shape["model"]
+    axes = []
+    used = False  # at most one dim per mesh axis; first eligible wins
+    for dim, name in zip(shape, spec):
+        if not used and name in _MODEL_AXES and dim % msize == 0:
+            axes.append("model")
+            used = True
+        else:
+            axes.append(None)
+    if fsdp and "data" in mesh.axis_names:
+        dsize = mesh.shape["data"]
+        named = list(spec) + [None] * (len(shape) - len(spec))
+        # only NAMED dims are fsdp-eligible: the anonymous leading dim of
+        # stacked layer params is scanned over and must stay unsharded
+        cand = sorted(((d, i) for i, d in enumerate(shape)
+                       if axes[i] is None and named[i] is not None
+                       and d % dsize == 0 and d >= dsize),
+                      reverse=True)
+        if cand:
+            axes[cand[0][1]] = "data"
+    # strip trailing Nones for tidiness
+    while axes and axes[-1] is None:
+        axes.pop()
+    return P(*axes)
+
+
+def param_shardings(spec_tree, shape_tree, mesh, fsdp: bool = False):
+    """NamedSharding tree for params (and, reused, optimizer moments)."""
+    def one(spec, shaped):
+        return NamedSharding(mesh, logical_to_pspec(tuple(spec), shaped.shape,
+                                                    mesh, fsdp))
+    return jax.tree.map(one, spec_tree, shape_tree, is_leaf=_is_spec)
+
+
+def batch_pspec(mesh) -> P:
+    """Global-batch sharding over (pod?, data)."""
+    if "pod" in mesh.axis_names:
+        return P(("pod", "data"))
+    return P("data")
+
+
+def _nshards(mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def batch_shardings(batch_tree, mesh):
+    """Shard every batch leaf on its leading (batch) dimension; replicate
+    when the batch does not divide the data axes (e.g. long_500k B=1)."""
+    baxis = batch_pspec(mesh)[0]
+    n = _nshards(mesh, baxis)
+
+    def one(leaf):
+        extra = max(leaf.ndim - 1, 0)
+        lead = baxis if leaf.shape[0] % n == 0 else None
+        return NamedSharding(mesh, P(*([lead] + [None] * extra)))
+    return jax.tree.map(one, batch_tree)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def cache_shardings(cache_tree, cfg, mesh):
+    """Decode caches: batch dim on (pod?,data); head/channel dims on model
+    where divisible. Cache layouts:
+      dense kv:   [L, B, S, K, hd]   -> (None, batch, None, model?, None)
+      hybrid kv:  [G, B, S, K, hd]   -> same
+      mamba conv: [L, B, K-1, C]     -> (None, batch, None, model?)
+      mamba h:    [L, B, di, N] / [L, B, H, hd, N]
+    """
+    b = batch_pspec(mesh)[0]
+    nb = _nshards(mesh, b)
+    msize = mesh.shape["model"]
+
+    def one(leaf):
+        dims = list(leaf.shape)
+        axes = [None] * leaf.ndim
+        if leaf.ndim >= 2 and dims[1] % nb == 0:
+            axes[1] = b  # batch is dim 1 (stacked layers lead)
+        # shard the LARGEST DIVISIBLE remaining dim on model (seq for kv
+        # caches -> sequence-parallel decode attention; channels for ssm)
+        cand = sorted(((d, i) for i, d in enumerate(dims[2:], start=2)),
+                      reverse=True)
+        for d, i in cand:
+            if d % msize == 0 and d >= msize:
+                axes[i] = "model"
+                break
+        while axes and axes[-1] is None:
+            axes.pop()
+        return NamedSharding(mesh, P(*axes))
+    return jax.tree.map(one, cache_tree)

@@ -1,0 +1,212 @@
+"""Jitted, sharded step functions + abstract input/state builders.
+
+Everything here works both with concrete arrays (training on real devices)
+and with ShapeDtypeStructs through .lower()/.compile() (the multi-pod
+dry-run) — no device allocation happens at build time.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import model as Mod
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+from repro.configs.shapes import ShapeConfig
+from . import sharding as Sh
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs (ShapeDtypeStruct stand-ins — never allocated)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """ShapeDtypeStruct batch for (arch x shape). Train/prefill kinds give the
+    full-sequence batch; decode kinds give the per-step token batch."""
+    B, S = shape.global_batch, shape.seq_len
+    f = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "encoder":
+            return {"frames": f((B, S, cfg.d_model), jnp.bfloat16),
+                    "labels": f((B, S), jnp.int32)}
+        if cfg.family == "vlm":
+            Ptok = cfg.frontend_tokens
+            return {"tokens": f((B, S - Ptok), jnp.int32),
+                    "patches": f((B, Ptok, cfg.d_model), jnp.bfloat16)}
+        return {"tokens": f((B, S), jnp.int32)}
+    # decode: one new token against a cache of length S
+    return {"tokens": f((B,), jnp.int32)}
+
+
+def abstract_params(cfg: ModelConfig):
+    """(param ShapeDtypeStructs, logical spec tree) without allocation.
+
+    The spec tree is plain python (tuples of axis names) built during
+    tracing, so we capture it via closure instead of returning it through
+    eval_shape.
+    """
+    captured = {}
+
+    def build():
+        p, s = Mod.init_model(jax.random.PRNGKey(0), cfg)
+        captured["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(build)
+    return shapes, captured["specs"]
+
+
+def abstract_state(cfg: ModelConfig):
+    p_shapes, specs = abstract_params(cfg)
+    opt_shapes = jax.eval_shape(adamw.init_opt_state, p_shapes)
+    return {"params": p_shapes, "opt": opt_shapes}, specs
+
+
+def state_shardings(cfg: ModelConfig, mesh):
+    state_shapes, specs = abstract_state(cfg)
+    psh = Sh.param_shardings(specs, state_shapes["params"], mesh,
+                             fsdp=cfg.fsdp)
+    rep = Sh.replicated(mesh)
+    return {
+        "params": psh,
+        "opt": {"m": psh, "v": psh, "step": rep},
+    }, state_shapes
+
+
+def cache_abstract(cfg: ModelConfig, shape: ShapeConfig):
+    return jax.eval_shape(
+        lambda: Mod.make_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+# ---------------------------------------------------------------------------
+# step factories
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig, mesh,
+                    grad_transform=None, microbatch: Optional[int] = None,
+                    donate: bool = True, shape: Optional[ShapeConfig] = None,
+                    compress: Optional[dict] = None):
+    """Returns (jitted_step, state_shardings_tree).
+
+    grad_transform: optional fn(grads, params, step) -> grads applied between
+    backward and optimizer.
+    microbatch: if set, split the batch into `microbatch` sequential
+    accumulation steps (grad accumulation via lax.scan).
+    compress: if set (dict of distopt.compression kwargs) and the mesh has a
+    "pod" axis, the cross-pod gradient reduction becomes the paper's sampled
+    exchange (multi-objective bottom-k sketches over DCN) instead of a dense
+    all-reduce.
+    """
+    st_shard, _ = state_shardings(cfg, mesh)
+    batch_sh = (Sh.batch_shardings(input_specs(cfg, shape), mesh)
+                if shape is not None else None)
+
+    def loss_of(params, batch):
+        return Mod.loss_fn(params, cfg, batch)
+
+    def compute_grads_once(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_of, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def compute_grads(params, batch):
+        """Full-batch grads, with optional microbatch accumulation."""
+        if not (microbatch and microbatch > 1):
+            return compute_grads_once(params, batch)
+        # under compression this runs INSIDE a pod-manual shard_map: the
+        # batch is already pod-local, so constrain on "data" only
+        baxis = "data" if compress is not None else Sh.batch_pspec(mesh)[0]
+
+        def split(leaf):
+            b = leaf.shape[0]
+            out = leaf.reshape(microbatch, b // microbatch, *leaf.shape[1:])
+            # keep each microbatch sharded on the data axes — without this
+            # the reshape decays to replicated and compute is duplicated
+            spec = P(*([None, baxis] + [None] * (out.ndim - 2)))
+            return jax.lax.with_sharding_constraint(
+                out, NamedSharding(mesh, spec))
+        micro = jax.tree.map(split, batch)
+
+        def acc(carry, mb):
+            loss_a, grads_a = carry
+            loss, metrics, grads = compute_grads_once(params, mb)
+            return (loss_a + loss,
+                    jax.tree.map(jnp.add, grads_a, grads)), metrics
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        (loss, grads), metrics = jax.lax.scan(
+            acc, (jnp.float32(0), zeros), micro)
+        return (loss / microbatch,
+                jax.tree.map(lambda m: m[-1], metrics),
+                jax.tree.map(lambda g: g / microbatch, grads))
+
+    compressed = None
+    if compress is not None:
+        from repro.distopt.compression import compressed_grads_fn
+        compressed = compressed_grads_fn(compute_grads, mesh, **compress)
+
+    def step_fn(state, batch):
+        params = state["params"]
+        if compressed is not None:
+            pspecs = jax.tree.map(lambda ns: ns.spec, st_shard["params"])
+            loss, metrics, grads = compressed(params, batch,
+                                              state["opt"]["step"], pspecs)
+        else:
+            loss, metrics, grads = compute_grads(params, batch)
+
+        if grad_transform is not None:
+            grads = grad_transform(grads, params, state["opt"]["step"])
+
+        new_params, new_opt, om = adamw.apply_updates(
+            params, grads, state["opt"], opt_cfg)
+        return ({"params": new_params, "opt": new_opt},
+                {"loss": loss, **metrics, **om})
+
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(st_shard, batch_sh),
+        out_shardings=(st_shard, None),
+        donate_argnums=(0,) if donate else ())
+    return jitted, st_shard
+
+
+def make_prefill_step(cfg: ModelConfig, mesh,
+                      shape: Optional[ShapeConfig] = None):
+    def step_fn(params, batch):
+        return Mod.prefill(params, cfg, batch)
+
+    p_shapes, specs = abstract_params(cfg)
+    psh = Sh.param_shardings(specs, p_shapes, mesh, fsdp=cfg.fsdp)
+    batch_sh = (Sh.batch_shardings(input_specs(cfg, shape), mesh)
+                if shape is not None else None)
+    cache_sh = (Sh.cache_shardings(
+        jax.eval_shape(lambda: Mod.make_cache(
+            cfg, shape.global_batch, shape.seq_len)), cfg, mesh)
+        if shape is not None and cfg.family != "encoder" else None)
+    out_sh = (None, cache_sh) if cache_sh is not None else None
+    return jax.jit(step_fn, in_shardings=(psh, batch_sh),
+                   out_shardings=out_sh), psh
+
+
+def make_serve_step(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                    donate: bool = True):
+    """Single-token decode step against a seq_len cache."""
+    p_shapes, specs = abstract_params(cfg)
+    psh = Sh.param_shardings(specs, p_shapes, mesh, fsdp=cfg.fsdp)
+    cache_sh = Sh.cache_shardings(cache_abstract(cfg, shape), cfg, mesh)
+
+    def step_fn(params, tokens, cache, index):
+        return Mod.serve_step(params, cfg, tokens, cache, index)
+
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(psh, Sh.batch_shardings(
+            input_specs(cfg, shape)["tokens"], mesh), cache_sh, None),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(2,) if donate else ())
+    return jitted, psh, cache_sh

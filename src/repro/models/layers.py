@@ -1,0 +1,529 @@
+"""Foundational layers shared by all architecture families.
+
+Conventions:
+  * activations [batch, seq, ...]; params are plain dicts of jnp arrays.
+  * every init_* returns (params, specs) where specs mirrors params with
+    tuples of LOGICAL axis names (mapped to mesh axes in launch/sharding.py).
+  * attention is chunked online-softmax (flash-style, lax.scan over q and kv
+    chunks) so 32k+ contexts lower with O(S) memory.
+  * the vocab-sharded cross-entropy never materializes full logits.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# param declaration helpers
+# ---------------------------------------------------------------------------
+
+def _normal(key, shape, scale):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                                jnp.float32))
+
+
+def dense_init(key, d_in, d_out, spec, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return _normal(key, (d_in, d_out), scale), spec
+
+
+def shard_tokens(x, enabled: bool):
+    """Constrain a [B, S, ...] activation to batch-on-data, rest replicated.
+
+    Pins the token layout at layer boundaries so the SPMD partitioner does
+    not alternate between token-sharded and head-sharded layouts across
+    blocks (which costs an all-to-all pair per layer — §Perf cell B). Only
+    AUTO mesh axes are used, so this is safe inside pod-manual shard_map.
+    """
+    if not enabled:
+        return x
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        names = getattr(m, "axis_names", None)
+        if not names or "data" not in names:
+            return x
+        types = getattr(m, "axis_types", (None,) * len(names))
+        auto = {n for n, t in zip(names, types) if "Auto" in str(t)}
+        baxes = tuple(a for a in ("pod", "data") if a in auto)
+        if not baxes:
+            return x
+        from jax.sharding import PartitionSpec
+        spec = PartitionSpec(baxes if len(baxes) > 1 else baxes[0],
+                             *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def shard_heads(x, enabled: bool):
+    """Constrain [B, S, H, hd] q/k/v to (batch, None, model, None) when the
+    head count divides the model axis — keeps attention head-sharded instead
+    of letting the partitioner pick seq sharding (whose chunked-scan
+    dynamic-slices lower to per-iteration all-to-alls; §Perf cell B)."""
+    if not enabled:
+        return x
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        names = getattr(m, "axis_names", None)
+        if not names or "model" not in names or x.ndim != 4:
+            return x
+        types = getattr(m, "axis_types", (None,) * len(names))
+        auto = {n for n, t in zip(names, types) if "Auto" in str(t)}
+        if "model" not in auto or x.shape[2] % m.shape["model"] != 0:
+            return x
+        baxes = tuple(a for a in ("pod", "data") if a in auto)
+        lead = (baxes if len(baxes) > 1 else baxes[0]) if baxes else None
+        from jax.sharding import PartitionSpec
+        return jax.lax.with_sharding_constraint(
+            x, PartitionSpec(lead, None, "model", None))
+    except Exception:
+        return x
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(kind: str, d: int):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}, {"scale": (None,)}
+    return ({"scale": jnp.ones((d,), jnp.float32),
+             "bias": jnp.zeros((d,), jnp.float32)},
+            {"scale": (None,), "bias": (None,)})
+
+
+def apply_norm(params, x, kind: str, eps: float):
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: [B, S, H, hd]; positions: [B, S] (int). Pairs (even, odd) rotated."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (math.log(theta) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B,S,half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention (flash-style, pure JAX)
+# ---------------------------------------------------------------------------
+
+_NEG = jnp.float32(-1e30)
+
+
+def _attn_inner(q, k, v, qpos, kpos, causal):
+    """One (q-chunk x kv-chunk) online-softmax pass, scanned over kv chunks.
+
+    q: [B, Cq, K, G, hd]; k/v: [B, nk, Ck, K, hd]; qpos: [Cq]; kpos: [nk, Ck].
+    Positions carry NO batch dim so the causal masks stay [Cq, Ck] (tiny,
+    loop-hoistable). Each kv-chunk step is rematerialized in backward
+    (jax.checkpoint) so the S^2 score/prob tensors are never stored —
+    flash-attention memory behaviour from composition.
+    """
+    B, Cq, K, G, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+
+    @jax.checkpoint
+    def step(carry, xs):
+        m, l, acc = carry
+        kc, vc, kp = xs  # [B,Ck,K,hd], [B,Ck,K,hd], [Ck]
+        s = jnp.einsum("bqkgh,bckh->bqkgc", q, kc,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            mask = (qpos[:, None] >= kp[None, :]) & (kp >= 0)[None, :]
+        else:
+            mask = jnp.broadcast_to((kp >= 0)[None, :], (Cq, kp.shape[0]))
+        s = jnp.where(mask[None, :, None, None, :], s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.maximum(m_new, -0.5 * 1e30)
+        p = jnp.exp(s - m_safe[..., None])                   # [B,Cq,K,G,Ck]
+        corr = jnp.exp(jnp.maximum(m, -0.5 * 1e30) - m_safe)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckh->bqkgh", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((B, Cq, K, G), _NEG),
+            jnp.zeros((B, Cq, K, G), jnp.float32),
+            jnp.zeros((B, Cq, K, G, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        step, init, (jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0), kpos))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out
+
+
+def _flash_fwd_scan(qr, kr, vr, qpos, kpos, causal):
+    """Forward over q chunks; returns (out [B,nq,Cq,K,G,hd], lse)."""
+    def q_step(_, xs):
+        qc, qp = xs
+        m, l, acc = _attn_inner_state(qc, kr, vr, qp, kpos, causal)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = jnp.maximum(m, -0.5 * 1e30) + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (out, lse)
+
+    _, (outs, lses) = jax.lax.scan(q_step, None,
+                                   (jnp.moveaxis(qr, 1, 0), qpos))
+    return jnp.moveaxis(outs, 0, 1), jnp.moveaxis(lses, 0, 1)
+
+
+def _attn_inner_state(q, k, v, qpos, kpos, causal):
+    """Online-softmax state (m, l, acc) for one q chunk vs all kv chunks."""
+    B, Cq, K, G, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+
+    @jax.checkpoint
+    def step(carry, xs):
+        m, l, acc = carry
+        kc, vc, kp = xs
+        s = jnp.einsum("bqkgh,bckh->bqkgc", q, kc,
+                       preferred_element_type=jnp.float32) * scale
+        if causal:
+            mask = (qpos[:, None] >= kp[None, :]) & (kp >= 0)[None, :]
+        else:
+            mask = jnp.broadcast_to((kp >= 0)[None, :], (Cq, kp.shape[0]))
+        s = jnp.where(mask[None, :, None, None, :], s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.maximum(m_new, -0.5 * 1e30)
+        p = jnp.exp(s - m_safe[..., None])
+        corr = jnp.exp(jnp.maximum(m, -0.5 * 1e30) - m_safe)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckh->bqkgh", p.astype(vc.dtype), vc,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((B, Cq, K, G), _NEG),
+            jnp.zeros((B, Cq, K, G), jnp.float32),
+            jnp.zeros((B, Cq, K, G, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(
+        step, init, (jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0), kpos))
+    return m, l, acc
+
+
+import functools
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash(causal: bool, Cq: int, Ck: int, q_offset: int,
+                kv_valid_len):
+    """Flash attention with a custom VJP: forward saves only (out, lse);
+    backward RECOMPUTES score tiles chunk-by-chunk (never stores S^2).
+    lru_cache keeps function identity stable so jit caching works."""
+
+    def reference(q, k, v):
+        B, Sq, H, hd = q.shape
+        Sk, K = k.shape[1], k.shape[2]
+        G = H // K
+        nq, nk = Sq // Cq, Sk // Ck
+        qr = q.reshape(B, nq, Cq, K, G, hd)
+        kr = k.reshape(B, nk, Ck, K, hd)
+        vr = v.reshape(B, nk, Ck, K, hd)
+        qpos, kpos = _positions(Sq, Sk, nq, nk)
+        out, _ = _flash_fwd_scan(qr, kr, vr, qpos, kpos, causal)
+        return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+    def _positions(Sq, Sk, nq, nk):
+        kpos = jnp.arange(Sk).reshape(nk, Ck)
+        if kv_valid_len is not None:
+            kpos = jnp.where(kpos < kv_valid_len, kpos, -1)
+        qpos = (q_offset + jnp.arange(Sq)).reshape(nq, Cq)
+        return qpos, kpos
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        return reference(q, k, v)
+
+    def fwd(q, k, v):
+        B, Sq, H, hd = q.shape
+        Sk, K = k.shape[1], k.shape[2]
+        G = H // K
+        nq, nk = Sq // Cq, Sk // Ck
+        qr = q.reshape(B, nq, Cq, K, G, hd)
+        kr = k.reshape(B, nk, Ck, K, hd)
+        vr = v.reshape(B, nk, Ck, K, hd)
+        qpos, kpos = _positions(Sq, Sk, nq, nk)
+        out, lse = _flash_fwd_scan(qr, kr, vr, qpos, kpos, causal)
+        o = out.reshape(B, Sq, H, hd).astype(q.dtype)
+        return o, (q, k, v, o, lse)
+
+    def bwd(res, do):
+        q, k, v, o, lse = res
+        B, Sq, H, hd = q.shape
+        Sk, K = k.shape[1], k.shape[2]
+        G = H // K
+        nq, nk = Sq // Cq, Sk // Ck
+        scale = 1.0 / math.sqrt(hd)
+        qr = q.reshape(B, nq, Cq, K, G, hd)
+        dor = do.reshape(B, nq, Cq, K, G, hd).astype(jnp.float32)
+        orr = o.reshape(B, nq, Cq, K, G, hd).astype(jnp.float32)
+        delta = jnp.sum(dor * orr, axis=-1)               # [B,nq,Cq,K,G]
+        kr = k.reshape(B, nk, Ck, K, hd)
+        vr = v.reshape(B, nk, Ck, K, hd)
+        qpos, kpos = _positions(Sq, Sk, nq, nk)
+
+        def kv_step(dq_acc, xs):
+            kc, vc, kp = xs                               # [B,Ck,K,hd], [Ck]
+
+            def q_step(carry, xs2):
+                dk_j, dv_j = carry
+                qc, doc, oc_delta, lse_c, qp = xs2
+                s = jnp.einsum("bqkgh,bckh->bqkgc", qc, kc,
+                               preferred_element_type=jnp.float32) * scale
+                if causal:
+                    mask = (qp[:, None] >= kp[None, :]) & (kp >= 0)[None, :]
+                else:
+                    mask = jnp.broadcast_to((kp >= 0)[None, :],
+                                            (Cq, kp.shape[0]))
+                s = jnp.where(mask[None, :, None, None, :], s, _NEG)
+                p = jnp.exp(s - lse_c[..., None])         # [B,Cq,K,G,Ck]
+                dv_j = dv_j + jnp.einsum("bqkgc,bqkgh->bckh", p, doc)
+                dp = jnp.einsum("bqkgh,bckh->bqkgc", doc,
+                                vc.astype(jnp.float32))
+                ds = p * (dp - oc_delta[..., None]) * scale
+                dk_j = dk_j + jnp.einsum("bqkgc,bqkgh->bckh", ds,
+                                         qc.astype(jnp.float32))
+                dq_c = jnp.einsum("bqkgc,bckh->bqkgh", ds,
+                                  kc.astype(jnp.float32))
+                return (dk_j, dv_j), dq_c
+
+            zeros_kv = jnp.zeros((B, Ck, K, hd), jnp.float32)
+            (dk_j, dv_j), dq_cs = jax.lax.scan(
+                q_step, (zeros_kv, zeros_kv),
+                (jnp.moveaxis(qr, 1, 0), jnp.moveaxis(dor, 1, 0),
+                 jnp.moveaxis(delta, 1, 0), jnp.moveaxis(lse, 1, 0), qpos))
+            dq_acc = dq_acc + jnp.moveaxis(dq_cs, 0, 1)
+            return dq_acc, (dk_j, dv_j)
+
+        dq0 = jnp.zeros((B, nq, Cq, K, G, hd), jnp.float32)
+        dq, (dks, dvs) = jax.lax.scan(
+            kv_step, dq0,
+            (jnp.moveaxis(kr, 1, 0), jnp.moveaxis(vr, 1, 0), kpos))
+        dq = dq.reshape(B, Sq, H, hd).astype(q.dtype)
+        dk = jnp.moveaxis(dks, 0, 1).reshape(B, Sk, K, hd).astype(k.dtype)
+        dv = jnp.moveaxis(dvs, 0, 1).reshape(B, Sk, K, hd).astype(v.dtype)
+        return dq, dk, dv
+
+    attn.defvjp(fwd, bwd)
+    return attn
+
+
+def chunked_attention(q, k, v, *, causal: bool, chunk: int, q_offset=0,
+                      kv_valid_len=None):
+    """q: [B,Sq,H,hd], k/v: [B,Sk,K,hd] (GQA: H = K*G). Returns [B,Sq,H,hd].
+
+    Flash-style: forward is an online-softmax double scan; backward is a
+    custom VJP that recomputes score tiles (O(S) memory both ways).
+    q_offset / kv_valid_len must be static ints here (training/prefill use
+    0/None; decode uses ``decode_attention`` instead).
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    Cq = min(chunk, Sq)
+    Ck = min(chunk, Sk)
+    assert (Sq // Cq) * Cq == Sq and (Sk // Ck) * Ck == Sk, \
+        "seq must divide by chunk"
+    fn = _make_flash(bool(causal), Cq, Ck, int(q_offset),
+                     int(kv_valid_len) if kv_valid_len is not None else None)
+    return fn(q, k, v)
+
+
+def decode_attention(q, k, v, cur_index):
+    """Single-token attention, un-chunked: q [B,1,H,hd] vs cache [B,S,K,hd].
+
+    Scores memory is O(B*H*S) — small for one query token — and the direct
+    einsum lets SPMD derive sequence-parallel decode when the cache's seq dim
+    is sharded on "model" (softmax max/sum + p@v contraction become small
+    all-reduces instead of a cache all-gather).
+    """
+    B, _, H, hd = q.shape
+    S, K = k.shape[1], k.shape[2]
+    G = H // K
+    qn = q.reshape(B, K, G, hd)
+    s = jnp.einsum("bkgh,bskh->bkgs", qn.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    valid = (jnp.arange(S) <= cur_index)[None, None, None, :]
+    s = jnp.where(valid, s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p.astype(v.dtype), v)
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (params + apply), GQA + optional bias + RoPE
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg):
+    ks = jax.random.split(key, 4)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    p, s = {}, {}
+    p["wq"], s["wq"] = dense_init(ks[0], d, qd, ("embed", "q_heads"))
+    p["wk"], s["wk"] = dense_init(ks[1], d, kvd, ("embed", "kv_heads"))
+    p["wv"], s["wv"] = dense_init(ks[2], d, kvd, ("embed", "kv_heads"))
+    p["wo"], s["wo"] = dense_init(ks[3], qd, d, ("q_heads", "embed"))
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), jnp.float32); s["bq"] = ("q_heads",)
+        p["bk"] = jnp.zeros((kvd,), jnp.float32); s["bk"] = ("kv_heads",)
+        p["bv"] = jnp.zeros((kvd,), jnp.float32); s["bv"] = ("kv_heads",)
+    return p, s
+
+
+def apply_attention(p, x, cfg, positions, cache=None, cache_index=None):
+    """Full-sequence (cache=None) or single-step decode (cache given).
+
+    cache: dict(k=[B,Smax,K,hd], v=[B,Smax,K,hd]); cache_index: current length.
+    Returns (out [B,S,D], new_cache).
+    """
+    B, S, _ = x.shape
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, H, hd)
+    k = (x @ p["wk"].astype(dt)).reshape(B, S, K, hd)
+    v = (x @ p["wv"].astype(dt)).reshape(B, S, K, hd)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt).reshape(1, 1, H, hd)
+        k = k + p["bk"].astype(dt).reshape(1, 1, K, hd)
+        v = v + p["bv"].astype(dt).reshape(1, 1, K, hd)
+    q = shard_heads(rope(q, positions, cfg.rope_theta), cfg.constrain_acts)
+    k = shard_heads(rope(k, positions, cfg.rope_theta), cfg.constrain_acts)
+    v = shard_heads(v, cfg.constrain_acts)
+
+    if cache is None:
+        out = chunked_attention(q, k, v, causal=cfg.causal, chunk=cfg.attn_chunk)
+        new_cache = None
+    else:
+        # decode: append this step's k/v, attend over valid prefix
+        idx = cache_index
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, idx, 0, 0))
+        out = decode_attention(q, ck, cv, idx)
+        new_cache = {"k": ck, "v": cv}
+    out = out.reshape(B, S, H * hd) @ p["wo"].astype(dt)
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (swiglu / geglu / gelu)
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p, s = {}, {}
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        p["wi"], s["wi"] = dense_init(ks[0], d, f, ("embed", "mlp"))
+        p["wg"], s["wg"] = dense_init(ks[1], d, f, ("embed", "mlp"))
+    else:
+        p["wi"], s["wi"] = dense_init(ks[0], d, f, ("embed", "mlp"))
+    p["wo"], s["wo"] = dense_init(ks[2], f, d, ("mlp", "embed"))
+    return p, s
+
+
+def apply_mlp(p, x, cfg):
+    dt = x.dtype
+    h = x @ p["wi"].astype(dt)
+    if cfg.mlp_kind == "swiglu":
+        h = jax.nn.silu(x @ p["wg"].astype(dt)) * h
+    elif cfg.mlp_kind == "geglu":
+        h = jax.nn.gelu(x @ p["wg"].astype(dt), approximate=True) * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    return h @ p["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embeddings + vocab-sharded chunked cross-entropy
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, cfg):
+    """Embedding rows padded to cfg.vocab_padded so the vocab dim shards
+    evenly; padded logits are masked to -inf in the loss/decode heads."""
+    V = cfg.vocab_padded
+    p = {"tok": _normal(key, (V, cfg.d_model), 1.0)}
+    s = {"tok": ("vocab", "embed")}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        p["out"] = _normal(k2, (V, cfg.d_model), 1.0 / math.sqrt(cfg.d_model))
+        s["out"] = ("vocab", "embed")
+    return p, s
+
+
+def embed_tokens(p, tokens, dtype):
+    return jnp.take(p["tok"], tokens, axis=0).astype(dtype)
+
+
+def unembed_matrix(p):
+    return p["out"] if "out" in p else p["tok"]
+
+
+def chunked_ce_loss(emb_params, hidden, labels, mask, chunk: int,
+                    vocab_size: int | None = None):
+    """Mean next-token CE without materializing [B,S,V] logits.
+
+    hidden: [B,S,D]; labels/mask: [B,S]. Scans seq chunks; each chunk is
+    rematerialized in backward (jax.checkpoint). Padded vocab rows (>=
+    vocab_size) are masked out of the partition function.
+    """
+    W = unembed_matrix(emb_params)  # [Vp, D]
+    B, S, D = hidden.shape
+    C = min(chunk, S)
+    n = S // C
+    assert n * C == S
+    Vp = W.shape[0]
+    vmask = (jnp.arange(Vp) < (vocab_size or Vp)).astype(jnp.float32)
+    vneg = (1.0 - vmask) * -1e30
+
+    @jax.checkpoint
+    def chunk_loss(hc, lc, mc):
+        logits = jnp.einsum("bcd,vd->bcv", hc.astype(jnp.float32),
+                            W.astype(jnp.float32)) + vneg
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum((lse - gold) * mc), jnp.sum(mc)
+
+    def step(carry, xs):
+        tot, cnt = carry
+        hc, lc, mc = xs
+        l, c = chunk_loss(hc, lc, mc)
+        return (tot + l, cnt + c), None
+
+    hs = jnp.moveaxis(hidden.reshape(B, n, C, D), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(B, n, C), 1, 0)
+    ms = jnp.moveaxis(mask.reshape(B, n, C).astype(jnp.float32), 1, 0)
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.float32(0), jnp.float32(0)),
+                                 (hs, ls, ms))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def logits_last(emb_params, hidden_last, vocab_size: int | None = None):
+    """Decode-step logits for the final position. hidden_last: [B, D].
+    Padded vocab rows masked to -inf (shape stays padded => even shards)."""
+    W = unembed_matrix(emb_params)
+    logits = jnp.einsum("bd,vd->bv", hidden_last.astype(jnp.float32),
+                        W.astype(jnp.float32))
+    if vocab_size is not None and vocab_size < W.shape[0]:
+        logits = logits + (jnp.arange(W.shape[0]) >= vocab_size) * -1e30
+    return logits

@@ -1,0 +1,297 @@
+"""Selective state-space blocks: Mamba-1 (S6) and Mamba-2 (SSD).
+
+TPU adaptation: the CUDA "hardware-aware" fused scan becomes a CHUNKED
+sequence scan — `lax.scan` over chunks carrying the SSM state, with the
+within-chunk recurrence computed by `lax.associative_scan` (mamba1) or the
+quadratic SSD dual form (mamba2). States are never materialized for the whole
+sequence, so 32k/500k contexts lower with O(S * d_inner) activation memory.
+
+SPMD note: input projections are stored UNFUSED (separate z/x/B/C/dt
+matrices) so each weight's output dim has a single semantic meaning and can
+be sharded on the "inner" logical axis without splitting component
+boundaries across shards.
+
+Both blocks support single-token decode via an explicit recurrent state
+(conv ring buffers + h), the sub-quadratic path used by `decode_32k` /
+`long_500k`.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _causal_conv(x, weight, bias):
+    """Depthwise causal conv over seq. x: [B,S,C]; weight: [C,K]; bias: [C]."""
+    K = weight.shape[1]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32), weight.T[:, None, :].astype(jnp.float32),
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=weight.shape[0])
+    return (out + bias).astype(x.dtype)
+
+
+def _conv_step(state, xt, weight, bias):
+    """One decode step of the causal conv. state: [B,K-1,C]; xt: [B,C]."""
+    window = jnp.concatenate([state, xt[:, None, :]], axis=1)  # [B,K,C]
+    out = jnp.einsum("bkc,ck->bc", window.astype(jnp.float32),
+                     weight.astype(jnp.float32)) + bias
+    return window[:, 1:], out.astype(xt.dtype)
+
+
+def _chunks(t, nC, Ck):
+    B = t.shape[0]
+    return jnp.moveaxis(t.reshape(B, nC, Ck, *t.shape[2:]), 1, 0)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (S6): per-channel diagonal A [d_inner, N]
+# ---------------------------------------------------------------------------
+
+def init_mamba1(key, cfg):
+    d, di, N, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    R = max(d // 16, 1)  # dt_rank
+    ks = jax.random.split(key, 7)
+    p, s = {}, {}
+    p["wz"], s["wz"] = dense_init(ks[0], d, di, ("embed", "inner"))
+    p["wx"], s["wx"] = dense_init(ks[1], d, di, ("embed", "inner"))
+    p["conv_w"] = 0.1 * jax.random.normal(ks[2], (di, K), jnp.float32)
+    s["conv_w"] = ("inner", None)
+    p["conv_b"] = jnp.zeros((di,), jnp.float32); s["conv_b"] = ("inner",)
+    p["x_proj"], s["x_proj"] = dense_init(ks[3], di, R + 2 * N, ("inner", None))
+    p["dt_proj"], s["dt_proj"] = dense_init(ks[4], R, di, (None, "inner"))
+    u = jax.random.uniform(ks[5], (di,), jnp.float32,
+                           math.log(1e-3), math.log(1e-1))
+    p["dt_bias"] = jnp.log(jnp.expm1(jnp.exp(u))); s["dt_bias"] = ("inner",)
+    p["A_log"] = jnp.log(jnp.broadcast_to(
+        jnp.arange(1, N + 1, dtype=jnp.float32), (di, N)).copy())
+    s["A_log"] = ("inner", None)
+    p["D"] = jnp.ones((di,), jnp.float32); s["D"] = ("inner",)
+    p["out_proj"], s["out_proj"] = dense_init(ks[6], di, d, ("inner", "embed"))
+    return p, s
+
+
+def _m1_scan_chunk(h0, a, bx):
+    """h_t = a_t h_{t-1} + bx_t via associative scan over the chunk axis.
+
+    a, bx: [B, C, di, N]; h0: [B, di, N]. Returns (h_all, h_last).
+    """
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    ca, cb = jax.lax.associative_scan(comb, (a, bx), axis=1)
+    h_all = ca * h0[:, None] + cb
+    return h_all, h_all[:, -1]
+
+
+def apply_mamba1(p, x, cfg, state=None, return_state=False):
+    """Full-seq (state=None) or single-step decode (state given).
+
+    state: dict(conv=[B,K-1,di], h=[B,di,N]). Returns (y, new_state).
+    return_state: full-seq prefill — also return the final recurrent state.
+    """
+    B, S, D = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    R = max(D // 16, 1)
+    dt_ = x.dtype
+    z = x @ p["wz"].astype(dt_)
+    xs = x @ p["wx"].astype(dt_)
+    A = -jnp.exp(p["A_log"])                                     # [di,N]
+
+    if state is None:
+        xc = jax.nn.silu(_causal_conv(xs, p["conv_w"], p["conv_b"]))
+        proj = xc @ p["x_proj"].astype(dt_)
+        dt_raw, Bc, Cc = jnp.split(proj, [R, R + N], axis=-1)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) @ p["dt_proj"]
+                             + p["dt_bias"])                     # [B,S,di]
+
+        nC = max(S // cfg.ssm_chunk, 1)
+        Ck = S // nC
+        assert nC * Ck == S
+
+        def chunk_step(h, xs_):
+            @jax.checkpoint
+            def inner(h, xc_, dt_c, B_c, C_c):
+                a = jnp.exp(dt_c[..., None] * A)                 # [B,Ck,di,N]
+                bx = (dt_c * xc_.astype(jnp.float32))[..., None] \
+                    * B_c.astype(jnp.float32)[:, :, None, :]
+                h_all, h_last = _m1_scan_chunk(h, a, bx)
+                y = jnp.einsum("bcdn,bcn->bcd", h_all,
+                               C_c.astype(jnp.float32))
+                return h_last, y
+            return inner(h, *xs_)
+
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+        h_fin, ys = jax.lax.scan(
+            chunk_step, h0, tuple(_chunks(t, nC, Ck) for t in (xc, dt, Bc, Cc)))
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
+        y = (y + xc.astype(jnp.float32) * p["D"]).astype(dt_)
+        new_state = None
+        if return_state:
+            K = cfg.ssm_conv
+            new_state = {"conv": xs[:, S - (K - 1):].astype(dt_), "h": h_fin}
+    else:
+        xt = xs[:, 0]                                            # [B,di]
+        conv_state, xc = _conv_step(state["conv"], xt, p["conv_w"], p["conv_b"])
+        xc = jax.nn.silu(xc)
+        proj = xc @ p["x_proj"].astype(dt_)
+        dt_raw, Bc, Cc = jnp.split(proj, [R, R + N], axis=-1)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) @ p["dt_proj"]
+                             + p["dt_bias"])                     # [B,di]
+        a = jnp.exp(dt[..., None] * A)                           # [B,di,N]
+        bx = (dt * xc.astype(jnp.float32))[..., None] \
+            * Bc.astype(jnp.float32)[:, None, :]
+        h = a * state["h"] + bx
+        y = jnp.einsum("bdn,bn->bd", h, Cc.astype(jnp.float32))
+        y = (y + xc.astype(jnp.float32) * p["D"]).astype(dt_)[:, None]
+        new_state = {"conv": conv_state, "h": h}
+
+    y = y * jax.nn.silu(z if state is None else z[:, :1])
+    return y @ p["out_proj"].astype(dt_), new_state
+
+
+def mamba1_state(cfg, batch: int, dtype=jnp.float32):
+    return {"conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+            "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD): scalar A per head, chunked dual form
+# ---------------------------------------------------------------------------
+
+def init_mamba2(key, cfg):
+    d, di, N = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H, K = cfg.ssm_heads, cfg.ssm_conv
+    ks = jax.random.split(key, 9)
+    p, s = {}, {}
+    p["wz"], s["wz"] = dense_init(ks[0], d, di, ("embed", "inner"))
+    p["wx"], s["wx"] = dense_init(ks[1], d, di, ("embed", "inner"))
+    p["wB"], s["wB"] = dense_init(ks[2], d, N, ("embed", None))
+    p["wC"], s["wC"] = dense_init(ks[3], d, N, ("embed", None))
+    p["wdt"], s["wdt"] = dense_init(ks[4], d, H, ("embed", None))
+    p["conv_x"] = 0.1 * jax.random.normal(ks[5], (di, K), jnp.float32)
+    s["conv_x"] = ("inner", None)
+    p["conv_xb"] = jnp.zeros((di,), jnp.float32); s["conv_xb"] = ("inner",)
+    p["conv_B"] = 0.1 * jax.random.normal(ks[6], (N, K), jnp.float32)
+    s["conv_B"] = (None, None)
+    p["conv_Bb"] = jnp.zeros((N,), jnp.float32); s["conv_Bb"] = (None,)
+    p["conv_C"] = 0.1 * jax.random.normal(ks[7], (N, K), jnp.float32)
+    s["conv_C"] = (None, None)
+    p["conv_Cb"] = jnp.zeros((N,), jnp.float32); s["conv_Cb"] = (None,)
+    p["A_log"] = jnp.log(jax.random.uniform(ks[8], (H,), jnp.float32, 1.0, 16.0))
+    s["A_log"] = (None,)
+    u = jax.random.uniform(jax.random.fold_in(key, 99), (H,), jnp.float32,
+                           math.log(1e-3), math.log(1e-1))
+    p["dt_bias"] = jnp.log(jnp.expm1(jnp.exp(u))); s["dt_bias"] = (None,)
+    p["D"] = jnp.ones((H,), jnp.float32); s["D"] = (None,)
+    p["norm_scale"] = jnp.ones((di,), jnp.float32); s["norm_scale"] = ("inner",)
+    p["out_proj"], s["out_proj"] = dense_init(
+        jax.random.fold_in(key, 100), di, d, ("inner", "embed"))
+    return p, s
+
+
+def _m2_gated_out(p, y, z, cfg, dt_):
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + cfg.norm_eps) * p["norm_scale"]
+    return y.astype(dt_) @ p["out_proj"].astype(dt_)
+
+
+def apply_mamba2(p, x, cfg, state=None, return_state=False):
+    """SSD block. state: dict(conv_x, conv_B, conv_C, h=[B,H,hd,N])."""
+    B, S, D = x.shape
+    di, N, H, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    dt_ = x.dtype
+    z = x @ p["wz"].astype(dt_)
+    xs = x @ p["wx"].astype(dt_)
+    Bp = x @ p["wB"].astype(dt_)
+    Cp = x @ p["wC"].astype(dt_)
+    dt_raw = x @ p["wdt"].astype(dt_)
+    A = -jnp.exp(p["A_log"])                                     # [H]
+
+    if state is None:
+        xc = jax.nn.silu(_causal_conv(xs, p["conv_x"], p["conv_xb"]))
+        Bc = jax.nn.silu(_causal_conv(Bp, p["conv_B"], p["conv_Bb"]))
+        Cc = jax.nn.silu(_causal_conv(Cp, p["conv_C"], p["conv_Cb"]))
+        xh = xc.reshape(B, S, H, hd)
+        dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+        loga = dt * A                                            # [B,S,H] (<0)
+
+        nC = max(S // cfg.ssm_chunk, 1)
+        Ck = S // nC
+        assert nC * Ck == S
+
+        def chunk_step(h, xs_):
+            @jax.checkpoint
+            def inner(h, xc, Bk, Ckk, dtc, la):
+                cum = jnp.cumsum(la, axis=1)                     # [B,C,H]
+                Bf, Cf = Bk.astype(jnp.float32), Ckk.astype(jnp.float32)
+                xf = xc.astype(jnp.float32)
+                sc = jnp.einsum("btn,bsn->bts", Cf, Bf)          # [B,C,C]
+                dec = cum[:, :, None, :] - cum[:, None, :, :]    # [B,t,s,H]
+                t_ = jnp.arange(xc.shape[1])
+                causal = (t_[:, None] >= t_[None, :])[None, :, :, None]
+                G = jnp.where(causal, jnp.exp(dec), 0.0) * sc[..., None]
+                G = G * dtc[:, None, :, :]                       # dt_s weight
+                y = jnp.einsum("btsh,bshd->bthd", G, xf)         # intra
+                y = y + jnp.einsum("bth,btn,bhdn->bthd",
+                                   jnp.exp(cum), Cf, h)          # inter
+                w = jnp.exp(cum[:, -1:, :] - cum) * dtc          # [B,C,H]
+                hb = jnp.einsum("bsh,bshd,bsn->bhdn", w, xf, Bf)
+                h_out = jnp.exp(cum[:, -1])[:, :, None, None] * h + hb
+                return h_out, y
+            return inner(h, *xs_)
+
+        h0 = jnp.zeros((B, H, hd, N), jnp.float32)
+        h_fin, ys = jax.lax.scan(
+            chunk_step, h0,
+            tuple(_chunks(t, nC, Ck) for t in (xh, Bc, Cc, dt, loga)))
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, hd)
+        y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+        y = y.reshape(B, S, di)
+        new_state = None
+        if return_state:
+            Kc = cfg.ssm_conv
+            new_state = {"conv_x": xs[:, S - (Kc - 1):].astype(dt_),
+                         "conv_B": Bp[:, S - (Kc - 1):].astype(dt_),
+                         "conv_C": Cp[:, S - (Kc - 1):].astype(dt_),
+                         "h": h_fin}
+        return _m2_gated_out(p, y, z, cfg, dt_), new_state
+
+    # ---- decode step ----
+    cs_x, xc = _conv_step(state["conv_x"], xs[:, 0], p["conv_x"], p["conv_xb"])
+    cs_B, Bc = _conv_step(state["conv_B"], Bp[:, 0], p["conv_B"], p["conv_Bb"])
+    cs_C, Cc = _conv_step(state["conv_C"], Cp[:, 0], p["conv_C"], p["conv_Cb"])
+    xc, Bc, Cc = jax.nn.silu(xc), jax.nn.silu(Bc), jax.nn.silu(Cc)
+    xh = xc.reshape(B, H, hd)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = jnp.exp(dt * A)                                          # [B,H]
+    hb = jnp.einsum("bh,bhd,bn->bhdn", dt, xh.astype(jnp.float32),
+                    Bc.astype(jnp.float32))
+    h = a[:, :, None, None] * state["h"] + hb
+    y = jnp.einsum("bn,bhdn->bhd", Cc.astype(jnp.float32), h)
+    y = y + xh.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B, 1, di)
+    new_state = {"conv_x": cs_x, "conv_B": cs_B, "conv_C": cs_C, "h": h}
+    return _m2_gated_out(p, y, z[:, :1], cfg, dt_), new_state
+
+
+def mamba2_state(cfg, batch: int, dtype=jnp.float32):
+    K = cfg.ssm_conv
+    return {"conv_x": jnp.zeros((batch, K - 1, cfg.d_inner), dtype),
+            "conv_B": jnp.zeros((batch, K - 1, cfg.ssm_state), dtype),
+            "conv_C": jnp.zeros((batch, K - 1, cfg.ssm_state), dtype),
+            "h": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                            cfg.ssm_state), jnp.float32)}

@@ -1,0 +1,73 @@
+"""Streaming training telemetry via mergeable universal samples.
+
+Any stream of (key, weight) pairs produced during training — per-token
+losses, per-example grad norms, router loads, activation magnitudes — is
+absorbed into a fixed-size universal monotone sketch (core.merge.Sketch).
+Sketches merge across steps (streaming) and across hosts (all_gather of the
+fixed-size arrays), after which ANY monotone f-statistic over ANY key
+segment can be estimated with gold-standard CV (paper Thm 5.1/§5.1):
+"how many tokens had loss >= 5?", "what is the total loss mass in domain
+d?", "capped-at-T contribution of the worst examples?" — all from one
+sketch, long after the raw stream is gone.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (Sketch, build_sketch, estimate, merge_sketches,
+                        sketch_capacity, universal_monotone_sample)
+from repro.core.funcs import StatFn
+
+
+@dataclasses.dataclass
+class TelemetryConfig:
+    k: int = 64
+    capacity: int = 1024
+    seed: int = 1234
+
+
+class StatsCollector:
+    """Host-side accumulator of a mergeable universal sample.
+
+    ``absorb(keys, weights)`` folds a new batch of keyed observations in;
+    ``query(f, segment_fn)`` estimates Q(f, H). Keys must be globally unique
+    per observation (e.g. step << 32 | position) — shared hashing makes the
+    same key land identically on every host (coordination, paper §1).
+    """
+
+    def __init__(self, cfg: TelemetryConfig):
+        self.cfg = cfg
+        self.sketch: Sketch | None = None
+
+    def absorb(self, keys, weights):
+        keys = jnp.asarray(keys, jnp.int32).reshape(-1)
+        weights = jnp.asarray(weights, jnp.float32).reshape(-1)
+        active = weights > 0
+        new = build_sketch(keys, weights, active, self.cfg.k,
+                           self.cfg.capacity, seed=self.cfg.seed)
+        self.sketch = (new if self.sketch is None
+                       else merge_sketches(self.sketch, new))
+
+    def merge_from(self, other: "StatsCollector"):
+        if other.sketch is not None:
+            self.sketch = (other.sketch if self.sketch is None
+                           else merge_sketches(self.sketch, other.sketch))
+
+    def query(self, f: StatFn, segment_fn=None) -> float:
+        """Estimate Q(f, H); segment_fn: vectorized predicate over keys."""
+        if self.sketch is None:
+            return 0.0
+        sk = self.sketch
+        member = sk.member
+        if segment_fn is not None:
+            member = member & jnp.asarray(segment_fn(sk.keys), bool)
+        contrib = jnp.where(member,
+                            f(sk.weights) / jnp.maximum(sk.probs, 1e-30), 0.0)
+        return float(jnp.sum(contrib))
+
+    def size(self) -> int:
+        return 0 if self.sketch is None else int(self.sketch.member.sum())

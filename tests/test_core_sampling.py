@@ -1,0 +1,197 @@
+"""Core sampling library: correctness vs paper definitions + oracles."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import repro.core as C
+
+
+def make_data(rng, n, sigma=1.5, dup_frac=0.0):
+    keys = np.arange(n, dtype=np.int32)
+    w = rng.lognormal(0, sigma, n).astype(np.float32)
+    if dup_frac > 0:  # force repeated weights (tie handling paths)
+        m = int(n * dup_frac)
+        w[:m] = np.round(w[:m], 1)
+    active = rng.random(n) > 0.05
+    return keys, w, active
+
+
+# ---------------------------------------------------------------- paper toy
+def test_paper_example_1_1_exact_statistics():
+    w = np.array([5, 100, 23, 7, 1, 5, 220, 19, 3, 2], np.float32)
+    act = np.ones(10, bool)
+    H = np.isin(np.arange(10), [1, 3, 7, 9])
+    assert float(C.exact(C.SUM, w, act, H)) == 128
+    assert float(C.exact(C.COUNT, w, act, H)) == 4
+    assert float(C.exact(C.thresh(10), w, act, H)) == 2
+    assert float(C.exact(C.cap(5), w, act, H)) == 17
+    assert float(C.exact(C.moment(2), w, act, H)) == 10414
+
+
+def test_paper_example_2_1_pps_probabilities():
+    w = np.array([5, 100, 23, 7, 1, 5, 220, 19, 3, 2], np.float32)
+    act = np.ones(10, bool)
+    p, s = C.pps_probabilities(w, act, C.SUM, 3)
+    assert float(s) == 385
+    np.testing.assert_allclose(np.round(np.asarray(p), 2),
+                               [.04, .78, .18, .05, .01, .04, 1., .15, .02, .02])
+    p, s = C.pps_probabilities(w, act, C.thresh(10), 3)
+    assert float(s) == 4
+    np.testing.assert_allclose(
+        np.asarray(p), [0, .75, .75, 0, 0, 0, .75, .75, 0, 0], atol=1e-6)
+
+
+def test_paper_example_3_1_multi_objective_size():
+    w = np.array([5, 100, 23, 7, 1, 5, 220, 19, 3, 2], np.float32)
+    act = np.ones(10, bool)
+    objs = [(C.SUM, 3), (C.thresh(10), 3), (C.cap(5), 3)]
+    probs = [C.pps_probabilities(w, act, f, k)[0] for f, k in objs]
+    pF = jnp.stack(probs).max(0)
+    naive = float(sum(p.sum() for p in probs))
+    assert abs(naive - 8.29) < 0.01          # paper's naive total
+    assert float(pF.sum()) < naive            # multi-objective strictly smaller
+    assert abs(float(pF.sum()) - 4.816) < 0.01  # exact Eq.4 value
+
+
+# ------------------------------------------------------------- equivalences
+@pytest.mark.parametrize("dup", [0.0, 0.5])
+@pytest.mark.parametrize("k", [1, 4, 16])
+def test_universal_monotone_prod_matches_ref(rng, k, dup):
+    keys, w, act = make_data(rng, 300, dup_frac=dup)
+    u = np.asarray(C.uniform01(keys, 7))
+    ref = C.universal_monotone_ref(w, u, act, k)
+    prod = C.universal_monotone_sample(keys, w, act, k, seed=7)
+    assert bool(jnp.all(ref.member == prod.member))
+    assert bool(jnp.allclose(ref.prob, prod.prob, atol=1e-6))
+    assert bool(jnp.all(ref.aux == prod.aux))
+
+
+@pytest.mark.parametrize("k", [2, 8])
+def test_universal_capping_prod_matches_ref(rng, k):
+    keys, w, act = make_data(rng, 250)
+    u = np.asarray(C.uniform01(keys, 3))
+    ref = C.universal_capping_ref(w, u, act, k)
+    prod = C.universal_capping_sample(keys, w, act, k, m_cap=250, seed=3)
+    assert bool(jnp.all(ref.member == prod.member))
+    assert bool(jnp.all(ref.hl == prod.hl))
+    assert bool(jnp.allclose(jnp.where(ref.member, ref.prob, 0),
+                             jnp.where(prod.member, prod.prob, 0), atol=1e-5))
+
+
+def test_capping_subset_of_monotone(rng):
+    """S^(C,k) ⊆ S^(M,k) (paper §6.2) under shared randomization."""
+    keys, w, act = make_data(rng, 400)
+    u = np.asarray(C.uniform01(keys, 11))
+    mono = C.universal_monotone_ref(w, u, act, 8)
+    capg = C.universal_capping_ref(w, u, act, 8)
+    assert bool(jnp.all(capg.member <= mono.member))
+    assert int(capg.member.sum()) < int(mono.member.sum())
+
+
+def test_multi_objective_union_and_dominance(rng):
+    keys, w, act = make_data(rng, 400)
+    objs = [(C.SUM, 8), (C.thresh(5.0), 8), (C.cap(2.0), 8)]
+    mb = C.multi_bottomk_sample(keys, w, act, objs, seed=0)
+    for f, kf in objs:
+        ded = C.bottomk_sample(keys, w, act, f, kf, seed=0)
+        assert bool(jnp.all(ded.member <= mb.member))
+        assert bool(jnp.all(jnp.where(ded.member,
+                                      mb.prob >= ded.prob - 1e-6, True)))
+
+
+def test_sample_size_bounds(rng):
+    n, k = 2000, 8
+    keys, w, act = make_data(rng, n)
+    sizes_m, sizes_c = [], []
+    for s in range(30):
+        u = np.asarray(C.uniform01(keys, s))
+        sizes_m.append(int(C.universal_monotone_ref(w, u, act, k).member.sum()))
+        sizes_c.append(int(C.universal_capping_ref(w, u, act, k).member.sum()))
+    assert np.mean(sizes_m) <= C.expected_size_bound(n, k)           # Thm 5.1
+    assert np.mean(sizes_c) <= C.capping_size_bound(k, w[act].max(),
+                                                    w[act].min())    # Thm 6.1
+    assert np.mean(sizes_c) < np.mean(sizes_m)
+
+
+# ------------------------------------------------------------ estimation
+@pytest.mark.parametrize("fname,f", [
+    ("sum", C.SUM), ("count", C.COUNT), ("thresh2", C.thresh(2.0)),
+    ("cap1", C.cap(1.0)), ("mom1.5", C.moment(1.5))])
+def test_universal_monotone_unbiased(rng, fname, f):
+    keys, w, act = make_data(rng, 400)
+    H = (np.arange(400) % 3 == 0)
+    ex = float(C.exact(f, w, act, H))
+    ests = []
+    for s in range(200):
+        sm = C.universal_monotone_sample(keys, w, act, 16, seed=s)
+        ests.append(float(C.estimate(f, w, sm.prob, sm.member, H)))
+    assert abs(np.mean(ests) / ex - 1) < 0.11, (np.mean(ests), ex)
+
+
+def test_cv_within_gold_standard_bound(rng):
+    """CV <= 1/sqrt(q (k-1)) for f in M from S^(M,k) (paper §5.1)."""
+    keys, w, act = make_data(rng, 500)
+    k = 24
+    for f in [C.SUM, C.thresh(3.0), C.cap(2.0)]:
+        ex = float(C.exact(f, w, act))
+        q = 1.0
+        ests = [float(C.estimate(f, w, s.prob, s.member))
+                for s in (C.universal_monotone_sample(keys, w, act, k, seed=i)
+                          for i in range(150))]
+        cv = np.std(ests) / ex
+        assert cv <= C.cv_bound(q, k) * 1.25, (f.name, cv, C.cv_bound(q, k))
+
+
+def test_closure_theorem_4_1(rng):
+    """pps multi-objective sample for F covers any nonneg combo of F."""
+    keys, w, act = make_data(rng, 300)
+    F = [(C.SUM, 5), (C.cap(2.0), 5)]
+    combo = C.combo((0.7, C.SUM), (2.0, C.cap(2.0)))
+    pF = jnp.stack([C.pps_probabilities(w, act, f, k)[0] for f, k in F]).max(0)
+    pc, _ = C.pps_probabilities(w, act, combo, 5)
+    # Thm 4.1: p^(combo) <= p^(F) pointwise => S^(F u combo) = S^(F)
+    assert bool(jnp.all(pc <= pF + 1e-6))
+
+
+def test_bottomk_conditional_probabilities_unbiased(rng):
+    keys, w, act = make_data(rng, 300)
+    for scheme in ("ppswor", "priority"):
+        ex = float(C.exact(C.SUM, w, act))
+        ests = [float(C.estimate(C.SUM, w, s.prob, s.member))
+                for s in (C.bottomk_sample(keys, w, act, C.SUM, 16, scheme,
+                                           seed=i) for i in range(150))]
+        assert abs(np.mean(ests) / ex - 1) < 0.09
+
+
+# ------------------------------------------------------------ mergeability
+def test_merge_matches_whole_data_sketch(rng):
+    n, k = 600, 8
+    keys, w, act = make_data(rng, n)
+    cap_sz = C.sketch_capacity(n, k)
+    parts = np.array_split(np.arange(n), 4)
+    sks = [C.build_sketch(keys[p], w[p], act[p], k, cap_sz, seed=3)
+           for p in parts]
+    merged = sks[0]
+    for s in sks[1:]:
+        merged = C.merge_sketches(merged, s)
+    whole = C.build_sketch(keys, w, act, k, cap_sz, seed=3)
+
+    def as_set(sk):
+        return {(int(a), float(b), round(float(p), 6))
+                for a, b, p, m, v in zip(sk.keys, sk.weights, sk.probs,
+                                         sk.member, sk.valid) if v and m}
+    assert as_set(merged) == as_set(whole)
+
+
+def test_merge_dedups_keys_keeping_max_weight(rng):
+    k = 4
+    keys = np.array([1, 2, 3, 4], np.int32)
+    w1 = np.array([1., 5., 2., 1.], np.float32)
+    w2 = np.array([3., 1., 2., 8.], np.float32)
+    act = np.ones(4, bool)
+    a = C.build_sketch(keys, w1, act, k, 16, seed=0)
+    b = C.build_sketch(keys, w2, act, k, 16, seed=0)
+    m = C.merge_sketches(a, b)
+    got = {int(kk): float(ww) for kk, ww, v in
+           zip(m.keys, m.weights, m.valid) if v}
+    assert got[1] == 3. and got[2] == 5. and got[4] == 8.

@@ -1,0 +1,50 @@
+"""Paper §7: metric-domain universal samples (centrality + ball density)."""
+import numpy as np
+import pytest
+
+from repro.core.metric_domains import (estimate_ball_density,
+                                       estimate_centrality,
+                                       universal_metric_sample)
+
+
+@pytest.fixture
+def points(rng):
+    # clustered points: the interesting regime for anchor-based bounds
+    centers = rng.normal(0, 5, (5, 3))
+    return (centers[rng.integers(0, 5, 600)]
+            + rng.normal(0, 0.7, (600, 3))).astype(np.float32)
+
+
+def test_centrality_unbiased_for_many_queries(points, rng):
+    k = 48
+    queries = rng.normal(0, 5, (6, 3)).astype(np.float32)
+    for q in queries:
+        exact = float(np.sum(np.linalg.norm(points - q, axis=1)))
+        ests = [float(estimate_centrality(
+            universal_metric_sample(points, k, seed=s), points, q))
+            for s in range(60)]
+        assert abs(np.mean(ests) / exact - 1) < 0.1, q
+        # gold-standard-style spread (overhead constant <= 2^mu)
+        assert np.std(ests) / exact < 2.0 / np.sqrt(k - 1)
+
+
+def test_ball_density_same_sample(points, rng):
+    k = 48
+    s = universal_metric_sample(points, k, seed=7)
+    q = points[3] + 0.1
+    for r in (1.0, 3.0, 8.0):
+        exact = float(np.sum(np.linalg.norm(points - q, axis=1) <= r))
+        if exact < 20:
+            continue  # tiny segments: CV bound too loose to test tightly
+        ests = [float(estimate_ball_density(
+            universal_metric_sample(points, k, seed=i), points, q, r))
+            for i in range(60)]
+        assert abs(np.mean(ests) / exact - 1) < 0.25, r
+
+
+def test_sample_size_overhead_constant(points):
+    """§7: universality overhead is a constant factor over k (not |X|)."""
+    for k in (16, 32):
+        sizes = [int(universal_metric_sample(points, k, seed=s).member.sum())
+                 for s in range(10)]
+        assert np.mean(sizes) <= 2.5 * (2.0 ** 1.0) * k

@@ -1,0 +1,115 @@
+"""Hypothesis property tests on the sampling system's invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+import repro.core as C
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+weights_strategy = st.lists(
+    st.floats(min_value=0.0009765625, max_value=16384.0, allow_nan=False,
+              allow_infinity=False, width=32),
+    min_size=4, max_size=120)
+
+
+@given(weights_strategy, st.integers(1, 12), st.integers(0, 10_000))
+def test_monotone_membership_iff_h_less_k(ws, k, seed):
+    """Lemma 5.1: x in S^(M,k) <=> h_x < k — on arbitrary weights."""
+    w = np.array(ws, np.float32)
+    n = len(w)
+    keys = np.arange(n, dtype=np.int32)
+    act = np.ones(n, bool)
+    u = np.asarray(C.uniform01(keys, seed))
+    s = C.universal_monotone_ref(w, u, act, k)
+    h = ((w[None, :] >= w[:, None]) & (u[None, :] < u[:, None])).sum(1)
+    np.testing.assert_array_equal(np.asarray(s.member), h < k)
+
+
+@given(weights_strategy, st.integers(1, 8), st.integers(0, 10_000))
+def test_monotone_contains_every_dedicated_bottomk(ws, k, seed):
+    """Lemma 5.2: S^(M,k) ⊇ bottom-k sample for ANY monotone f."""
+    w = np.array(ws, np.float32)
+    n = len(w)
+    keys = np.arange(n, dtype=np.int32)
+    act = np.ones(n, bool)
+    uni = C.universal_monotone_sample(keys, w, act, k, seed=seed)
+    med = float(np.median(w))
+    for f in [C.SUM, C.COUNT, C.thresh(med), C.cap(med), C.moment(2.0)]:
+        ded = C.bottomk_sample(keys, w, act, f, k, "ppswor", seed=seed)
+        assert bool(jnp.all(ded.member <= uni.member)), f.name
+
+
+@given(weights_strategy, st.integers(1, 8), st.integers(0, 1000))
+def test_probs_are_valid_probabilities(ws, k, seed):
+    w = np.array(ws, np.float32)
+    keys = np.arange(len(w), dtype=np.int32)
+    act = np.ones(len(w), bool)
+    s = C.universal_monotone_sample(keys, w, act, k, seed=seed)
+    p = np.asarray(s.prob)
+    m = np.asarray(s.member)
+    assert np.all(p[m] > 0) and np.all(p[m] <= 1.0 + 1e-6)
+    assert np.all(p[~m] == 0)
+    # estimator nonnegative & zero outside sample (paper Eq. 2)
+    est = C.estimate(C.SUM, w, s.prob, s.member)
+    assert float(est) >= 0
+
+
+@given(weights_strategy, st.integers(2, 8), st.integers(0, 1000),
+       st.integers(2, 5))
+def test_merge_is_associative_and_order_free(ws, k, seed, nparts):
+    w = np.array(ws, np.float32)
+    n = len(w)
+    keys = np.arange(n, dtype=np.int32)
+    act = np.ones(n, bool)
+    cap_sz = C.sketch_capacity(n, k)
+    parts = np.array_split(np.arange(n), min(nparts, n))
+
+    def member_set(sk):
+        return {(int(a), round(float(p), 5)) for a, p, m, v in
+                zip(sk.keys, sk.probs, sk.member, sk.valid) if v and m}
+
+    sks = [C.build_sketch(keys[p], w[p], act[p], k, cap_sz, seed=seed)
+           for p in parts if len(p)]
+    fwd = sks[0]
+    for s in sks[1:]:
+        fwd = C.merge_sketches(fwd, s)
+    rev = sks[-1]
+    for s in reversed(sks[:-1]):
+        rev = C.merge_sketches(rev, s)
+    whole = C.build_sketch(keys, w, act, k, cap_sz, seed=seed)
+    assert member_set(fwd) == member_set(rev) == member_set(whole)
+
+
+@given(weights_strategy, st.integers(0, 1000))
+def test_coordination_nesting(ws, seed):
+    """Coordinated bottom-k samples are nested in k (same randomization)."""
+    w = np.array(ws, np.float32)
+    keys = np.arange(len(w), dtype=np.int32)
+    act = np.ones(len(w), bool)
+    prev = None
+    for k in (1, 2, 4, 8):
+        s = C.bottomk_sample(keys, w, act, C.SUM, k, seed=seed)
+        if prev is not None:
+            assert bool(jnp.all(prev <= s.member))
+        prev = s.member
+
+
+@given(st.lists(st.floats(min_value=0.5, max_value=100, width=32),
+                min_size=8, max_size=64),
+       st.integers(1, 6), st.integers(0, 500))
+def test_capping_membership_iff_hl_less_k(ws, k, seed):
+    """Lemma 6.3 on arbitrary inputs (ref vs first-principles count)."""
+    w = np.array(ws, np.float32)
+    n = len(w)
+    keys = np.arange(n, dtype=np.int32)
+    act = np.ones(n, bool)
+    u = np.asarray(C.uniform01(keys, seed))
+    r = np.asarray(C.ppswor_rank(u))
+    s = C.universal_capping_ref(w, u, act, k)
+    h = ((w[None, :] >= w[:, None]) & (u[None, :] < u[:, None])).sum(1)
+    rw = r / w
+    l = ((w[None, :] < w[:, None]) & (rw[None, :] < rw[:, None])).sum(1)
+    np.testing.assert_array_equal(np.asarray(s.member), (h + l) < k)
