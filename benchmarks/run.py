@@ -1,12 +1,17 @@
 """Benchmark harness — one function per paper table/claim.
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = the quantity the
-paper's table/theorem is about). Run: PYTHONPATH=src python -m benchmarks.run
+paper's table/theorem is about) and mirrors every row into
+``BENCH_results.json`` ({name: us_per_call} plus derived strings) so the
+perf trajectory is machine-readable across PRs.
+Run: PYTHONPATH=src python -m benchmarks.run
 """
 from __future__ import annotations
 
+import json
 import math
 import time
+from functools import partial
 
 import numpy as np
 import jax
@@ -14,6 +19,15 @@ import jax.numpy as jnp
 
 import repro.core as C
 import repro.kernels as K
+
+RESULTS: dict[str, float] = {}      # name -> us_per_call
+DERIVED: dict[str, str] = {}        # name -> derived string
+
+
+def _record(name: str, us: float, derived: str = ""):
+    RESULTS[name] = round(float(us), 3)
+    DERIVED[name] = derived
+    print(f"{name},{us:.1f},{derived}")
 
 
 def _timeit(fn, n=5):
@@ -34,7 +48,7 @@ def bench_example_2_1_pps_table():
     us = _timeit(lambda: [C.pps_probabilities(w, act, f, 3)[0]
                           for f in (C.SUM, C.thresh(10), C.cap(5))][0])
     p_sum, s = C.pps_probabilities(w, act, C.SUM, 3)
-    print(f"example_2_1_pps_table,{us:.1f},total_sum={float(s):g}")
+    _record("example_2_1_pps_table", us, f"total_sum={float(s):g}")
 
 
 def bench_example_3_1_multiobjective_size():
@@ -48,8 +62,8 @@ def bench_example_3_1_multiobjective_size():
         return jnp.stack(probs).max(0).sum(), sum(p.sum() for p in probs)
     us = _timeit(lambda: run()[0])
     e_sf, naive = run()
-    print(f"example_3_1_multiobjective_size,{us:.1f},"
-          f"E_SF={float(e_sf):.3f};naive={float(naive):.3f};paper=4.68/8.29")
+    _record("example_3_1_multiobjective_size", us,
+            f"E_SF={float(e_sf):.3f};naive={float(naive):.3f};paper=4.68/8.29")
 
 
 def bench_thm_5_1_universal_size():
@@ -68,13 +82,14 @@ def bench_thm_5_1_universal_size():
         bound = k * math.log(n)
         lower = k * (math.log(n) - math.log(k))  # Thm 5.2 Omega(k ln n)
         rows.append((n, np.mean(sizes), bound, lower, us))
-        print(f"thm5_1_universal_size_n{n},{us:.1f},"
-              f"mean={np.mean(sizes):.1f};kln_n={bound:.1f};"
-              f"lower={lower:.1f}")
+        _record(f"thm5_1_universal_size_n{n}", us,
+                f"mean={np.mean(sizes):.1f};kln_n={bound:.1f};"
+                f"lower={lower:.1f}")
     g1 = rows[1][1] / rows[0][1]
     g2 = rows[2][1] / rows[1][1]
-    print(f"thm5_1_log_growth,0.0,size_ratio_per_10x={g1:.2f}/{g2:.2f}"
-          f";expected_if_log={math.log(10_000)/math.log(1_000):.2f}")
+    _record("thm5_1_log_growth", 0.0,
+            f"size_ratio_per_10x={g1:.2f}/{g2:.2f}"
+            f";expected_if_log={math.log(10_000)/math.log(1_000):.2f}")
 
 
 def bench_thm_6_1_capping_size():
@@ -91,8 +106,8 @@ def bench_thm_6_1_capping_size():
         us = _timeit(lambda: C.universal_capping_sample(
             keys, w, act, k, m_cap=4096, seed=0).member)
         bound = C.capping_size_bound(k, 10.0, 0.1)
-        print(f"thm6_1_capping_size_n{n},{us:.1f},"
-              f"mean={np.mean(sizes):.1f};bound={bound:.1f}")
+        _record(f"thm6_1_capping_size_n{n}", us,
+                f"mean={np.mean(sizes):.1f};bound={bound:.1f}")
 
 
 def bench_thm_3_1_estimation_cv():
@@ -113,8 +128,8 @@ def bench_thm_3_1_estimation_cv():
         q = ex / float(C.exact(f, w, act))
         cv = float(np.std(ests) / ex)
         bound = C.cv_bound(q, k)
-        print(f"thm3_1_cv_{f.name},{us:.1f},"
-              f"cv={cv:.3f};bound={bound:.3f};ok={cv <= bound}")
+        _record(f"thm3_1_cv_{f.name}", us,
+                f"cv={cv:.3f};bound={bound:.3f};ok={cv <= bound}")
 
 
 def bench_sampling_throughput():
@@ -126,13 +141,13 @@ def bench_sampling_throughput():
     act = np.ones(n, bool)
     us_prod = _timeit(lambda: C.universal_monotone_sample(
         keys, w, act, k, seed=0).member)
-    print(f"throughput_universal_sortscan,{us_prod:.1f},"
-          f"keys_per_s={n/us_prod*1e6:.3g}")
+    _record("throughput_universal_sortscan", us_prod,
+            f"keys_per_s={n/us_prod*1e6:.3g}")
     objs = ((0, 0.0), (3, 2.0), (1, 0.0))
     us_k = _timeit(lambda: K.ops.multi_objective_bottomk_kernel(
         jnp.asarray(keys), jnp.asarray(w), jnp.asarray(act), objs, k)[0])
-    print(f"throughput_multiobj_kernel,{us_k:.1f},"
-          f"keys_per_s={n/us_k*1e6:.3g};note=interpret_mode_cpu")
+    _record("throughput_multiobj_kernel", us_k,
+            f"keys_per_s={n/us_k*1e6:.3g};note=interpret_mode_cpu")
 
 
 def bench_merge_throughput():
@@ -146,7 +161,7 @@ def bench_merge_throughput():
     a = C.build_sketch(keys[:n // 2], w[:n // 2], act[:n // 2], k, cap_sz, 0)
     b = C.build_sketch(keys[n // 2:], w[n // 2:], act[n // 2:], k, cap_sz, 0)
     us = _timeit(lambda: C.merge_sketches(a, b).member)
-    print(f"merge_sketches,{us:.1f},capacity={cap_sz}")
+    _record("merge_sketches", us, f"capacity={cap_sz}")
 
 
 def bench_gradient_compression():
@@ -162,8 +177,55 @@ def bench_gradient_compression():
     est = _merge_leaf(idx[None], val[None], prob[None], valid[None], n, 1)
     rel = float(jnp.linalg.norm(est - g) / jnp.linalg.norm(g))
     dots = float(jnp.dot(est, g) / jnp.dot(g, g))
-    print(f"grad_compression,{us:.1f},ratio={dense/wire:.1f}x;"
-          f"l2rel={rel:.3f};proj={dots:.3f}")
+    _record("grad_compression", us,
+            f"ratio={dense/wire:.1f}x;l2rel={rel:.3f};proj={dots:.3f}")
+
+
+_SCALING_POOL = ((0, 0.0), (3, 2.0), (1, 0.0), (2, 5.0),
+                 (4, 1.5), (3, 0.5), (2, 1.0), (4, 0.8))
+
+
+@partial(jax.jit, static_argnames=("objectives", "k"))
+def _per_objective_loop(keys, weights, active, objectives, k):
+    """The seed's multi-objective path: |F| separate block-select launches
+    plus a per-objective StatFn/prob pass — the flat-vs-linear baseline."""
+    from repro.core.bottomk import conditional_prob
+    n = keys.shape[0]
+    seeds = K.fused_seeds(keys, weights, active, objectives)
+    member = jnp.zeros((n,), bool)
+    prob = jnp.zeros((n,), jnp.float32)
+    for j, (kind, param) in enumerate(objectives):
+        vals, idx, tau = K.bottomk_select(seeds[j], k)
+        m = (seeds[j] <= vals[k - 1]) & jnp.isfinite(seeds[j])
+        fv = jnp.where(active,
+                       K.ops.statfn_of(kind, param)(
+                           jnp.asarray(weights, jnp.float32)), 0.0)
+        p = jnp.where(m, conditional_prob(fv, tau, "ppswor"), 0.0)
+        member = member | m
+        prob = jnp.maximum(prob, p)
+    return member, prob
+
+
+def bench_multiobj_scaling():
+    """Launch-cost scaling in |F|: fused single-launch chain vs the
+    per-objective loop. The fused path should grow sublinearly (bandwidth
+    term only); the loop pays |F| launches + 2|F| scans."""
+    n, k = 65_536, 64
+    rng = np.random.default_rng(6)
+    keys = jnp.arange(n, dtype=jnp.int32)
+    w = jnp.asarray(rng.lognormal(0, 1.5, n).astype(np.float32))
+    act = jnp.ones(n, bool)
+    base_fused = base_loop = None
+    for nf in (1, 2, 4, 8):
+        objs = _SCALING_POOL[:nf]
+        us_f = _timeit(lambda: K.ops.multi_objective_bottomk_kernel(
+            keys, w, act, objs, k)[0])
+        us_l = _timeit(lambda: _per_objective_loop(keys, w, act, objs, k)[0])
+        if base_fused is None:
+            base_fused, base_loop = us_f, us_l
+        _record(f"multiobj_scaling_F{nf}", us_f,
+                f"fused_x={us_f/base_fused:.2f};loop_us={us_l:.1f};"
+                f"loop_x={us_l/base_loop:.2f}")
 
 
 def bench_dryrun_roofline_summary():
@@ -176,7 +238,7 @@ def bench_dryrun_roofline_summary():
             r = json.load(open(f))
             cells += 1
             ok += r.get("status") in ("ok", "skipped")
-        print(f"dryrun_cells_{mesh},0.0,total={cells};ok_or_skipped={ok}")
+        _record(f"dryrun_cells_{mesh}", 0.0, f"total={cells};ok_or_skipped={ok}")
 
 
 def main() -> None:
@@ -189,7 +251,12 @@ def main() -> None:
     bench_sampling_throughput()
     bench_merge_throughput()
     bench_gradient_compression()
+    bench_multiobj_scaling()
     bench_dryrun_roofline_summary()
+    with open("BENCH_results.json", "w") as fh:
+        json.dump({"us_per_call": RESULTS, "derived": DERIVED}, fh,
+                  indent=1, sort_keys=True)
+    print(f"# wrote BENCH_results.json ({len(RESULTS)} entries)")
 
 
 if __name__ == "__main__":

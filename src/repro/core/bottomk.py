@@ -34,10 +34,20 @@ class BottomK(NamedTuple):
     seeds: jnp.ndarray    # float32 [n] — the f-seeds (inf for inactive)
 
 
-def _kth_smallest(x, k: int):
-    """k-th smallest (1-indexed) of x, +inf if fewer than k finite entries."""
-    neg_topk = jax.lax.top_k(-x, k)[0]
-    return -neg_topk[k - 1]
+def kth_and_tau(x, k: int):
+    """(k-th, (k+1)-th) smallest of x along the last axis — ONE top_k scan.
+
+    Works batched: x [..., n] -> (kth [...], tau [...]). tau is +inf when
+    n <= k (no (k+1)-th entry), matching the bottom-k convention that a
+    sample holding every key has threshold +inf.
+    """
+    n = x.shape[-1]
+    kk = min(k, n)
+    vals = -jax.lax.top_k(-x, min(kk + 1, n))[0]
+    kth = vals[..., kk - 1]
+    tau = (vals[..., kk] if n > kk
+           else jnp.full(x.shape[:-1], jnp.inf, jnp.float32))
+    return kth, tau
 
 
 def conditional_prob(fv, tau, scheme: str):
@@ -59,12 +69,10 @@ def bottomk_sample(keys, weights, active, f: StatFn, k: int, scheme: str = "ppsw
     """
     u = uniform01(keys, seed)
     seeds = f_seed(weights, active, f, u, scheme)
-    n = seeds.shape[0]
-    kk = min(k, n)
-    kth = _kth_smallest(seeds, kk)
+    # kth and tau = (k+1)-th smallest seed from one top_k(k+1) scan;
+    # tau = +inf when fewer than k+1 finite seeds.
+    kth, tau = kth_and_tau(seeds, k)
     member = (seeds < kth) | ((seeds == kth) & jnp.isfinite(seeds))
-    # tau = (k+1)-th smallest seed; +inf when fewer than k+1 finite seeds.
-    tau = _kth_smallest(seeds, kk + 1) if n > kk else _INF
     fv = jnp.where(active, f(weights), 0.0)
     p = jnp.where(member, conditional_prob(fv, tau, scheme), 0.0)
     return BottomK(member=member, prob=p, tau=tau, seeds=seeds)

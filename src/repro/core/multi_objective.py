@@ -12,9 +12,10 @@ from __future__ import annotations
 
 from typing import NamedTuple, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 
-from .bottomk import _kth_smallest, conditional_prob, f_seed
+from .bottomk import conditional_prob, f_seed
 from .funcs import StatFn
 from .hashing import uniform01
 from .pps import pps_probabilities
@@ -62,41 +63,38 @@ def multi_bottomk_sample(keys, weights, active,
     """
     u = uniform01(keys, seed)
     n = weights.shape[0]
+    nf = len(objectives)
 
-    member = jnp.zeros((n,), bool)
-    probs = []
-    taus = []
-    thr_key_onehots = []  # one-hot of the threshold key per objective
-    members_f = []
-    for f, kf in objectives:
-        seeds = f_seed(weights, active, f, u, scheme)
-        kk = min(kf, n)
-        kth = _kth_smallest(seeds, kk)
-        m_f = (seeds < kth) | ((seeds == kth) & jnp.isfinite(seeds))
-        tau_f = _kth_smallest(seeds, kk + 1) if n > kk else jnp.float32(jnp.inf)
-        fv = jnp.where(active, f(weights), 0.0)
-        p_f = jnp.where(m_f, conditional_prob(fv, tau_f, scheme), 0.0)
-        member = member | m_f
-        probs.append(p_f)
-        taus.append(tau_f)
-        members_f.append(m_f)
-        # threshold key of objective f: the key whose seed == tau_f
-        thr_key_onehots.append(jnp.isfinite(tau_f) & (seeds == tau_f))
+    # Seeds and f-values for every objective under the SAME u_x, stacked
+    # [|F|, n]; thresholds for ALL objectives come from ONE batched
+    # top_k(max_k + 1) scan instead of 2 full-n scans per objective.
+    seeds_F = jnp.stack([f_seed(weights, active, f, u, scheme)
+                         for f, _ in objectives])
+    fv_F = jnp.stack([jnp.where(active, f(weights), 0.0)
+                      for f, _ in objectives])
+    kks = [min(kf, n) for _, kf in objectives]
+    sorted_vals = -jax.lax.top_k(-seeds_F, min(max(kks) + 1, n))[0]
+    kth = jnp.stack([sorted_vals[j, kk - 1] for j, kk in enumerate(kks)])
+    taus = jnp.stack([sorted_vals[j, kk] if n > kk else jnp.float32(jnp.inf)
+                      for j, kk in enumerate(kks)])
 
-    probs = jnp.stack(probs)            # [|F|, n]
+    members_F = ((seeds_F < kth[:, None])
+                 | ((seeds_F == kth[:, None]) & jnp.isfinite(seeds_F)))
+    probs = jnp.where(members_F,
+                      conditional_prob(fv_F, taus[:, None], scheme), 0.0)
+    # threshold key of objective f: the key whose seed == tau_f
+    thr_key_onehots = jnp.isfinite(taus)[:, None] & (seeds_F == taus[:, None])
+
+    member = members_F.any(axis=0)
     p_F = probs.max(axis=0)
     # g_x = argmax_f p_x^(f) among objectives with x in S^(f) — since p_f is 0
     # for non-members of f, the plain argmax implements the paper's g_x.
     g_x = probs.argmax(axis=0)          # [n]
     # Z = {y_x : x in S^(F), p_x^(g_x) < 1} \ S^(F): union of threshold keys of
     # objectives that are "g_x" for at least one member with p < 1.
-    needed_f = jnp.zeros((len(objectives),), bool)
     member_needs = member & (p_F < 1.0)
-    for i in range(len(objectives)):
-        needed_f = needed_f.at[i].set(jnp.any(member_needs & (g_x == i)))
-    aux = jnp.zeros((n,), bool)
-    for i, oh in enumerate(thr_key_onehots):
-        aux = aux | (oh & needed_f[i])
-    aux = aux & ~member
+    needed_f = jnp.any(member_needs[None, :]
+                       & (g_x[None, :] == jnp.arange(nf)[:, None]), axis=1)
+    aux = jnp.any(thr_key_onehots & needed_f[:, None], axis=0) & ~member
     return MultiBottomK(member=member, prob=jnp.where(member, p_F, 0.0),
-                        aux=aux, taus=jnp.stack(taus))
+                        aux=aux, taus=taus)

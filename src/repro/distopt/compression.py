@@ -35,7 +35,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import cap, COUNT, SUM
-from repro.core.bottomk import conditional_prob, f_seed
+from repro.core.bottomk import conditional_prob, f_seed, kth_and_tau
 from repro.core.hashing import uniform01
 
 _OBJECTIVES = lambda cap_frac: ((SUM, "sum"), (cap(cap_frac), "cap"),
@@ -58,18 +58,18 @@ def _sample_leaf(g, k: int, seed, cap_frac: float, scheme: str = "ppswor"):
     u = uniform01(jnp.arange(n, dtype=jnp.int32), seed)
 
     kk = min(k, n)
-    member = jnp.zeros((n,), bool)
-    prob = jnp.zeros((n,), jnp.float32)
-    for f, _name in _OBJECTIVES(cap_frac):
-        seeds = f_seed(wn, active, f, u, scheme)
-        kth = -jax.lax.top_k(-seeds, kk)[0][kk - 1]
-        m_f = (seeds <= kth) & jnp.isfinite(seeds)
-        tau = (-jax.lax.top_k(-seeds, kk + 1)[0][kk]
-               if n > kk else jnp.float32(jnp.inf))
-        fv = jnp.where(active, f(wn), 0.0)
-        p_f = jnp.where(m_f, conditional_prob(fv, tau, scheme), 0.0)
-        member = member | m_f
-        prob = jnp.maximum(prob, p_f)               # p^(F) = max_f p^(f)
+    # Batched over the (static) 3 objectives: stack the shared-u_x seeds
+    # [3, n], then ONE top_k(k+1) scan yields every kth and tau — no
+    # per-objective scans, no second pass for the threshold.
+    objs = _OBJECTIVES(cap_frac)
+    seeds_F = jnp.stack([f_seed(wn, active, f, u, scheme) for f, _ in objs])
+    fv_F = jnp.stack([jnp.where(active, f(wn), 0.0) for f, _ in objs])
+    kth, tau = kth_and_tau(seeds_F, kk)
+    member_F = (seeds_F <= kth[:, None]) & jnp.isfinite(seeds_F)
+    p_F = jnp.where(member_F,
+                    conditional_prob(fv_F, tau[:, None], scheme), 0.0)
+    member = member_F.any(axis=0)
+    prob = p_F.max(axis=0)                          # p^(F) = max_f p^(f)
 
     # compact members into 3k fixed slots (members first)
     slots = 3 * kk

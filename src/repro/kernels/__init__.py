@@ -3,11 +3,21 @@
 Each kernel: <name>.py (pl.pallas_call + BlockSpec), validated in
 interpret=True mode against the pure-jnp oracle in ref.py; ops.py exposes
 the jit'd compositions.
+
+``interpret`` resolution: every kernel entry point takes ``interpret=None``
+and resolves it via :func:`default_interpret` — interpret (python-evaluated)
+mode on CPU, compiled Mosaic on TPU/GPU — so call sites never hardcode the
+backend.
 """
-from .seeds import fused_seeds
+from ._util import default_interpret, resolve_interpret
+from .seeds import fused_seeds, fused_seeds_fvals
 from .rankcount import rank_counts
-from .blockselect import block_bottomk, bottomk_select
+from .blockselect import (
+    batched_block_bottomk, batched_bottomk_select, block_bottomk,
+    bottomk_select)
 from . import ops, ref
 
-__all__ = ["fused_seeds", "rank_counts", "block_bottomk", "bottomk_select",
-           "ops", "ref"]
+__all__ = ["fused_seeds", "fused_seeds_fvals", "rank_counts",
+           "block_bottomk", "bottomk_select", "batched_block_bottomk",
+           "batched_bottomk_select", "default_interpret",
+           "resolve_interpret", "ops", "ref"]

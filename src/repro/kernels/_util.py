@@ -1,0 +1,42 @@
+"""Leaf-module helpers shared by the kernel entry points.
+
+Lives below the package __init__ so submodules can import it without a
+cycle through ``repro.kernels``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def default_interpret() -> bool:
+    """True iff Pallas kernels should run in interpret mode (no accelerator).
+
+    Mosaic lowering needs a TPU (or Triton a GPU); on the CPU backend the
+    same kernels run under the Pallas interpreter. Call sites pass
+    ``interpret=None`` and let this decide.
+    """
+    return jax.default_backend() == "cpu"
+
+
+def resolve_interpret(interpret) -> bool:
+    """None -> backend default; bool -> as given (explicit override)."""
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+def round_up(n: int, multiple: int) -> int:
+    """n rounded up to the next multiple."""
+    return n + (-n) % multiple
+
+
+def pad_tail(x, npad: int, fill):
+    """Pad the last axis of x to length npad with a neutral fill value.
+
+    The fill must be inert for the consuming kernel (inactive entry,
+    +inf seed, zero weight); callers slice results back to the true n.
+    """
+    pad = npad - x.shape[-1]
+    if not pad:
+        return x
+    widths = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    return jnp.pad(x, widths, constant_values=fill)

@@ -10,6 +10,18 @@ to the VPU; the TPU-native plan is two-level selection:
 The k smallest of the union are always among the per-block k smallest, so
 the two-level result is exact. One HBM read of the seeds, k*n/B vector
 mins — bandwidth-optimal for k << B.
+
+The kernel is natively BATCHED over objectives: it consumes the [|F|, n]
+seed matrix of ``fused_seeds`` directly as (|F|, B) VMEM slabs — the
+(|F|, n/B) block decomposition with the |F| axis vectorized into the VPU
+sublane dimension (full occupancy at |F| >= 8) instead of serialized into
+grid steps. A multi-objective sample therefore costs ONE launch whose
+per-step work is the pure O(|F| B) bandwidth term, plus one top_k over
+[|F|, nb*k] candidates — not |F| launches + 2|F| full-n scans. The 1D
+entry points are views of the batched path with |F| = 1.
+
+Ragged n is auto-padded with +inf seeds (idx -1), which never survive
+selection ahead of a finite seed.
 """
 from __future__ import annotations
 
@@ -20,56 +32,88 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels._util import pad_tail, resolve_interpret, round_up
+
 BLOCK = 2048
 _INF = np.float32(np.inf)
 
 
 def _blockselect_kernel(seeds_ref, vals_ref, idx_ref, *, k: int, block: int):
-    i = pl.program_id(0)
-    s = seeds_ref[...].astype(jnp.float32)
+    i = pl.program_id(0)  # block index along n
+    s = seeds_ref[...].astype(jnp.float32)          # [F, block]
     base = i * block
-    local_idx = jax.lax.iota(jnp.int32, block)
+    local_idx = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     for j in range(k):
-        m = jnp.min(s)
-        # first position attaining the min (iota tiebreak)
+        m = jnp.min(s, axis=1, keepdims=True)       # [F, 1], all rows at once
+        # first position attaining each row's min (iota tiebreak)
         is_min = s == m
-        pos = jnp.min(jnp.where(is_min, local_idx, block))
-        vals_ref[j] = m
-        idx_ref[j] = jnp.where(jnp.isfinite(m), base + pos, -1)
+        pos = jnp.min(jnp.where(is_min, local_idx, block), axis=1,
+                      keepdims=True)
+        vals_ref[:, j] = m[:, 0]
+        idx_ref[:, j] = jnp.where(jnp.isfinite(m[:, 0]), base + pos[:, 0], -1)
         s = jnp.where(local_idx == pos, _INF, s)
 
 
 @partial(jax.jit, static_argnames=("k", "interpret"))
-def block_bottomk(seeds, k: int, interpret: bool = True):
-    """seeds [n] -> (vals [nb, k], idx [nb, k]) block-local k smallest."""
-    n = seeds.shape[0]
+def batched_block_bottomk(seeds, k: int, interpret=None):
+    """seeds [F, n] -> (vals [F, nb*k], idx [F, nb*k]) block-local k smallest.
+
+    One pallas launch for ALL objectives: grid (n/B,), each step selecting
+    the k smallest of every objective row of a (F, B) slab simultaneously;
+    n is padded to a block multiple with +inf seeds (idx -1).
+    """
+    interpret = resolve_interpret(interpret)
+    nf, n = seeds.shape
     b = min(BLOCK, n)
-    assert n % b == 0
-    nb = n // b
-    return pl.pallas_call(
+    npad = round_up(n, b)
+    s = pad_tail(seeds.astype(jnp.float32), npad, _INF)
+    nb = npad // b
+    vals, idx = pl.pallas_call(
         partial(_blockselect_kernel, k=k, block=b),
         grid=(nb,),
-        in_specs=[pl.BlockSpec((b,), lambda i: (i,))],
-        out_specs=[pl.BlockSpec((k,), lambda i: (i,)),
-                   pl.BlockSpec((k,), lambda i: (i,))],
-        out_shape=[jax.ShapeDtypeStruct((nb * k,), jnp.float32),
-                   jax.ShapeDtypeStruct((nb * k,), jnp.int32)],
+        in_specs=[pl.BlockSpec((nf, b), lambda i: (0, i))],
+        out_specs=[pl.BlockSpec((nf, k), lambda i: (0, i)),
+                   pl.BlockSpec((nf, k), lambda i: (0, i))],
+        out_shape=[jax.ShapeDtypeStruct((nf, nb * k), jnp.float32),
+                   jax.ShapeDtypeStruct((nf, nb * k), jnp.int32)],
         interpret=interpret,
-    )(seeds.astype(jnp.float32))
+    )(s)
+    return vals, idx
 
 
 @partial(jax.jit, static_argnames=("k", "interpret"))
-def bottomk_select(seeds, k: int, interpret: bool = True):
+def batched_bottomk_select(seeds, k: int, interpret=None):
+    """Exact global bottom-k per objective: one launch + one batched merge.
+
+    seeds [F, n] -> (vals [F, k] ascending, idx [F, k]; invalid slots =
+    (+inf, -1)) and tau [F] = the (k+1)-th smallest seed per objective
+    (+inf if fewer), matching core.bottomk semantics row-wise.
+    """
+    nf, n = seeds.shape
+    ksel = min(k + 1, n)
+    vals, idx = batched_block_bottomk(seeds, ksel, interpret=interpret)
+    m = min(k + 1, vals.shape[1])
+    neg_top, pos = jax.lax.top_k(-vals, m)          # ONE scan for all F
+    cand_vals = -neg_top
+    cand_idx = jnp.take_along_axis(idx, pos, axis=1)
+    tau = (cand_vals[:, k] if cand_vals.shape[1] > k
+           else jnp.full((nf,), _INF, jnp.float32))
+    return cand_vals[:, :k], cand_idx[:, :k], tau
+
+
+def block_bottomk(seeds, k: int, interpret=None):
+    """seeds [n] -> (vals [nb, k], idx [nb, k]) block-local k smallest."""
+    vals, idx = batched_block_bottomk(seeds[None, :], k, interpret=interpret)
+    return vals[0], idx[0]
+
+
+def bottomk_select(seeds, k: int, interpret=None):
     """Exact global bottom-k via block-local selection + candidate merge.
 
     Returns (vals [k] ascending, idx [k]; invalid slots = (+inf, -1)) and
     tau = the (k+1)-th smallest seed (+inf if fewer), matching
     core.bottomk semantics.
     """
-    vals, idx = block_bottomk(seeds, min(k + 1, seeds.shape[0]),
-                              interpret=interpret)
-    neg_top, pos = jax.lax.top_k(-vals, min(k + 1, vals.shape[0]))
-    cand_vals = -neg_top
-    cand_idx = idx[pos]
-    tau = cand_vals[k] if cand_vals.shape[0] > k else jnp.float32(jnp.inf)
-    return cand_vals[:k], cand_idx[:k], tau
+    vals, idx, tau = batched_bottomk_select(seeds[None, :], k,
+                                            interpret=interpret)
+    return vals[0], idx[0], tau[0]

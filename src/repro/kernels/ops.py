@@ -1,6 +1,20 @@
 """High-level jit'd entry points composing the Pallas kernels into the
-paper's sampling operations. On a real TPU set interpret=False; on CPU the
-kernels run in interpret mode (same program, python-evaluated)."""
+paper's sampling operations. ``interpret=None`` auto-detects the backend
+(interpret mode on CPU, compiled Mosaic on TPU); pass an explicit bool to
+override.
+
+The multi-objective path is a single-launch batched chain (paper §3.3:
+one summary for Omega(|F| n) work):
+
+  fused_seeds_fvals   ONE launch   -> seeds [F, n], fvals [F, n]
+  batched blockselect ONE launch   -> candidates [F, nb*(k+1)]
+  batched top_k merge ONE scan     -> kth/tau per objective
+  membership + conditional prob + max over F: vectorized [F, n] jnp ops
+
+No Python loop over objectives anywhere — launch count and scan count are
+flat in |F|; only the O(|F| n) bandwidth term remains, which is the
+paper's lower bound.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -9,48 +23,49 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.bottomk import conditional_prob
+from repro.core.funcs import StatFn
 from repro.core.hashing import rank_of, uniform01
-from .blockselect import bottomk_select
+from .blockselect import batched_bottomk_select
 from .rankcount import rank_counts
-from .seeds import fused_seeds
+from .seeds import fused_seeds_fvals
 
 # objective encoding for the seeds kernel
 SUM, COUNT, THRESH, CAP, MOMENT = 0, 1, 2, 3, 4
+
+_KIND_NAMES = {0: "sum", 1: "count", 2: "thresh", 3: "cap", 4: "moment"}
+
+
+def statfn_of(kind: int, param: float) -> StatFn:
+    """The core StatFn equivalent of a (kind, param) kernel objective."""
+    return StatFn(_KIND_NAMES[kind], float(param))
 
 
 @partial(jax.jit, static_argnames=("objectives", "k", "scheme", "seed",
                                    "interpret"))
 def multi_objective_bottomk_kernel(keys, weights, active, objectives,
                                    k: int, scheme="ppswor", seed=0,
-                                   interpret=True):
-    """Multi-objective bottom-k sample S^(F) via the fused kernels.
+                                   interpret=None):
+    """Multi-objective bottom-k sample S^(F) via the fused batched kernels.
 
     Returns (member [n] bool, prob [n] float32) — same semantics as
-    core.multi_objective.multi_bottomk_sample (member/prob only).
+    core.multi_objective.multi_bottomk_sample (member/prob only), with a
+    launch count independent of |F|.
     """
     n = keys.shape[0]
-    seeds = fused_seeds(keys, weights, active, objectives, scheme, seed,
-                        interpret=interpret)                  # [F, n]
-    member = jnp.zeros((n,), bool)
-    prob = jnp.zeros((n,), jnp.float32)
-    for j, (kind, param) in enumerate(objectives):
-        vals, idx, tau = bottomk_select(seeds[j], k, interpret=interpret)
-        m = jnp.zeros((n,), bool).at[jnp.where(idx >= 0, idx, n)].set(
-            True, mode="drop")
-        from repro.core.funcs import StatFn
-        kindname = {0: "sum", 1: "count", 2: "thresh", 3: "cap",
-                    4: "moment"}[kind]
-        f = StatFn(kindname, float(param))
-        fv = jnp.where(active, f(jnp.asarray(weights, jnp.float32)), 0.0)
-        p = jnp.where(m, conditional_prob(fv, tau, scheme), 0.0)
-        member = member | m
-        prob = jnp.maximum(prob, p)
-    return member, prob
+    kk = min(k, n)
+    seeds, fvals = fused_seeds_fvals(keys, weights, active, objectives,
+                                     scheme, seed, interpret=interpret)
+    vals, _idx, tau = batched_bottomk_select(seeds, kk, interpret=interpret)
+    kth = vals[:, kk - 1]                                  # [F]
+    member_f = (seeds <= kth[:, None]) & jnp.isfinite(seeds)
+    p_f = jnp.where(member_f,
+                    conditional_prob(fvals, tau[:, None], scheme), 0.0)
+    return member_f.any(axis=0), p_f.max(axis=0)
 
 
 @partial(jax.jit, static_argnames=("k", "scheme", "seed", "interpret"))
 def universal_capping_kernel(keys, weights, active, k: int, scheme="ppswor",
-                             seed=0, interpret=True):
+                             seed=0, interpret=None):
     """S^(C,k) membership via the blocked rank-count kernel (Lemma 6.3).
 
     Returns (member, hl) — membership exact; probabilities follow the

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels._util import pad_tail, resolve_interpret, round_up
+
 BLOCK_X = 512
 BLOCK_Y = 1024
 
@@ -56,21 +58,25 @@ def _rankcount_kernel(wx_ref, hx_ref, lx_ref, ax_ref,
 
 
 @partial(jax.jit, static_argnames=("interpret",))
-def rank_counts(weights, s_h, s_l, active, interpret=True):
+def rank_counts(weights, s_h, s_l, active, interpret=None):
     """Returns (h, l) int32 [n]; h vs order stat s_h (u), l vs s_l (r/w).
 
-    n must divide BLOCK_X/BLOCK_Y (or be smaller than both). The diagonal
-    never self-counts: the strict comparison s_y < s_x is false at y == x.
+    Ragged n is auto-padded with inactive entries (never counted on either
+    side of a pair) and the counts sliced back. The diagonal never
+    self-counts: the strict comparison s_y < s_x is false at y == x.
     """
+    interpret = resolve_interpret(interpret)
     n = weights.shape[0]
-    bx = min(BLOCK_X, n)
-    by = min(BLOCK_Y, n)
-    assert n % bx == 0 and n % by == 0
-    grid = (n // bx, n // by)
-    w32 = weights.astype(jnp.float32)
-    sh32 = s_h.astype(jnp.float32)
-    sl32 = s_l.astype(jnp.float32)
-    a32 = active.astype(jnp.int32)
+    # n <= BLOCK_X fits a (1, 1) grid unpadded; otherwise round up to a
+    # BLOCK_Y multiple (also a BLOCK_X multiple since BLOCK_X | BLOCK_Y).
+    npad = n if n <= BLOCK_X else round_up(n, BLOCK_Y)
+    bx = min(BLOCK_X, npad)
+    by = min(BLOCK_Y, npad)
+    w32 = pad_tail(weights.astype(jnp.float32), npad, 0.0)
+    sh32 = pad_tail(s_h.astype(jnp.float32), npad, 0.0)
+    sl32 = pad_tail(s_l.astype(jnp.float32), npad, 0.0)
+    a32 = pad_tail(active.astype(jnp.int32), npad, 0)
+    grid = (npad // bx, npad // by)
 
     xspec = lambda b: pl.BlockSpec((b,), lambda i, j: (i,))
     yspec = lambda b: pl.BlockSpec((b,), lambda i, j: (j,))
@@ -81,8 +87,8 @@ def rank_counts(weights, s_h, s_l, active, interpret=True):
                   yspec(by), yspec(by), yspec(by), yspec(by)],
         out_specs=[pl.BlockSpec((bx,), lambda i, j: (i,)),
                    pl.BlockSpec((bx,), lambda i, j: (i,))],
-        out_shape=[jax.ShapeDtypeStruct((n,), jnp.int32),
-                   jax.ShapeDtypeStruct((n,), jnp.int32)],
+        out_shape=[jax.ShapeDtypeStruct((npad,), jnp.int32),
+                   jax.ShapeDtypeStruct((npad,), jnp.int32)],
         interpret=interpret,
     )(w32, sh32, sl32, a32, w32, sh32, sl32, a32)
-    return h, l
+    return h[:n], l[:n]

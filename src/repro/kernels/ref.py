@@ -27,6 +27,29 @@ def fused_seeds_ref(keys, weights, active, objectives, scheme="ppswor",
     return jnp.stack(out)
 
 
+def fused_seeds_fvals_ref(keys, weights, active, objectives,
+                          scheme="ppswor", seed=0):
+    """Oracle for kernels.seeds.fused_seeds_fvals (seeds AND f-values)."""
+    act = jnp.asarray(active, bool)
+    w = jnp.asarray(weights, jnp.float32)
+    fvals = jnp.stack([
+        jnp.where(act, StatFn(_KIND_TO_STATFN[kind][0], float(param))(w), 0.0)
+        for kind, param in objectives])
+    return fused_seeds_ref(keys, weights, active, objectives, scheme,
+                           seed), fvals
+
+
+def batched_bottomk_select_ref(seeds, k: int):
+    """Oracle for kernels.blockselect.batched_bottomk_select ([F, n] rows)."""
+    n = seeds.shape[-1]
+    neg, idx = jax.lax.top_k(-jnp.asarray(seeds, jnp.float32), min(k + 1, n))
+    vals = -neg
+    tau = (vals[:, k] if n > k
+           else jnp.full(seeds.shape[:-1], jnp.inf, jnp.float32))
+    iv = jnp.where(jnp.isfinite(vals[:, :k]), idx[:, :k], -1)
+    return vals[:, :k], iv.astype(jnp.int32), tau
+
+
 def rank_counts_ref(weights, s_h, s_l, active):
     """Oracle for kernels.rankcount.rank_counts. O(n^2)."""
     w = jnp.asarray(weights, jnp.float32)

@@ -1,9 +1,13 @@
 """Hypothesis property tests on the sampling system's invariants."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
 
-import repro.core as C
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed; property tests skipped")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import repro.core as C  # noqa: E402
 
 settings.register_profile("ci", deadline=None, max_examples=25)
 settings.load_profile("ci")
