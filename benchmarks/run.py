@@ -164,17 +164,58 @@ def bench_merge_throughput():
     _record("merge_sketches", us, f"capacity={cap_sz}")
 
 
+def bench_absorb_throughput(smoke: bool = False):
+    """Tentpole claim: the jit'd device-resident MultiSketch fold vs the
+    seed's host-side per-batch rebuild-and-merge absorption loop
+    (build_sketch + merge_sketches per chunk), capacity >= 1024."""
+    k, capacity = 64, 1024
+    chunk = 1024 if smoke else 4096
+    iters = 4 if smoke else 12
+    rng = np.random.default_rng(7)
+    ws = [rng.lognormal(0, 1, chunk).astype(np.float32)
+          for _ in range(iters)]
+    ks = [(i * chunk + np.arange(chunk)).astype(np.int32)
+          for i in range(iters)]
+    act = np.ones(chunk, bool)
+
+    spec = C.MultiSketchSpec(objectives=((C.SUM, k), (C.COUNT, k)),
+                             seed=0, capacity=capacity)
+
+    def fold_all():
+        st = C.multisketch_empty(spec)
+        for i in range(iters):
+            st = C.multisketch_absorb(st, ks[i], ws[i], spec=spec,
+                                      use_kernels=False)
+        return st.member
+
+    def host_rebuild_all():
+        sk = None
+        for i in range(iters):
+            new = C.build_sketch(ks[i], ws[i], act, k, capacity, 0)
+            sk = new if sk is None else C.merge_sketches(sk, new)
+        return sk.member
+
+    us_fold = _timeit(fold_all, n=3) / iters
+    us_host = _timeit(host_rebuild_all, n=3) / iters
+    _record("absorb_fold_device", us_fold,
+            f"keys_per_s={chunk/us_fold*1e6:.3g};capacity={capacity}")
+    _record("absorb_host_rebuild", us_host,
+            f"keys_per_s={chunk/us_host*1e6:.3g};"
+            f"fold_speedup={us_host/us_fold:.2f}x")
+
+
 def bench_gradient_compression():
     """distopt: wire bytes vs dense, and estimate quality."""
     from repro.distopt.compression import _sample_leaf, _merge_leaf
     n, k = 262_144, 512
     rng = np.random.default_rng(5)
     g = (rng.standard_normal(n) * (rng.random(n) < 0.3)).astype(np.float32)
-    us = _timeit(lambda: _sample_leaf(jnp.asarray(g), k, 7, 0.01)[0])
-    idx, val, prob, valid = _sample_leaf(jnp.asarray(g), k, 7, 0.01)
-    wire = int(idx.size) * (4 + 4 + 4)
+    us = _timeit(lambda: _sample_leaf(jnp.asarray(g), k, 7, 0.01).keys)
+    sk = _sample_leaf(jnp.asarray(g), k, 7, 0.01)
+    wire = int(sk.keys.size) * (4 + 4 + 4)
     dense = n * 4
-    est = _merge_leaf(idx[None], val[None], prob[None], valid[None], n, 1)
+    est = _merge_leaf(sk.keys[None], sk.weights[None], sk.probs[None],
+                      sk.valid[None], n, 1)
     rel = float(jnp.linalg.norm(est - g) / jnp.linalg.norm(g))
     dots = float(jnp.dot(est, g) / jnp.dot(g, g))
     _record("grad_compression", us,
@@ -241,17 +282,26 @@ def bench_dryrun_roofline_summary():
         _record(f"dryrun_cells_{mesh}", 0.0, f"total={cells};ok_or_skipped={ok}")
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced fast subset (CI): skips the scaling "
+                         "sweeps, shrinks the absorb bench")
+    args = ap.parse_args(argv)
     print("name,us_per_call,derived")
     bench_example_2_1_pps_table()
     bench_example_3_1_multiobjective_size()
-    bench_thm_5_1_universal_size()
-    bench_thm_6_1_capping_size()
-    bench_thm_3_1_estimation_cv()
-    bench_sampling_throughput()
+    if not args.smoke:
+        bench_thm_5_1_universal_size()
+        bench_thm_6_1_capping_size()
+        bench_thm_3_1_estimation_cv()
+        bench_sampling_throughput()
     bench_merge_throughput()
+    bench_absorb_throughput(smoke=args.smoke)
     bench_gradient_compression()
-    bench_multiobj_scaling()
+    if not args.smoke:
+        bench_multiobj_scaling()
     bench_dryrun_roofline_summary()
     with open("BENCH_results.json", "w") as fh:
         json.dump({"us_per_call": RESULTS, "derived": DERIVED}, fh,

@@ -16,6 +16,11 @@ from .estimators import (cv_bound, estimate, estimate_segments, exact,
                          exact_segments)
 from .merge import (Sketch, build_sketch, merge_many, merge_sketches,
                     sketch_capacity, sketch_estimate)
+from .multi_sketch import (MultiSketch, MultiSketchSpec, multisketch_absorb,
+                           multisketch_absorb_inline, multisketch_build,
+                           multisketch_empty, multisketch_estimate,
+                           multisketch_merge, multisketch_merge_stacked,
+                           multisketch_overflow, multisketch_select)
 from .metric_domains import (MetricSample, estimate_ball_density,
                              estimate_centrality, universal_metric_sample)
 
@@ -32,6 +37,11 @@ __all__ = [
     "estimate", "estimate_segments", "exact", "exact_segments", "cv_bound",
     "Sketch", "build_sketch", "merge_sketches", "merge_many",
     "sketch_capacity", "sketch_estimate",
+    "MultiSketch", "MultiSketchSpec", "multisketch_absorb",
+    "multisketch_absorb_inline",
+    "multisketch_build", "multisketch_empty", "multisketch_estimate",
+    "multisketch_merge", "multisketch_merge_stacked", "multisketch_overflow",
+    "multisketch_select",
     "MetricSample", "universal_metric_sample", "estimate_centrality",
     "estimate_ball_density",
 ]

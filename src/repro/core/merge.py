@@ -11,6 +11,29 @@ union data set would have produced.
 
 u_x comes from the shared hash (core.hashing), so the same key sampled on two
 shards carries the same u — the coordination requirement.
+
+The MULTI-OBJECTIVE counterpart lives in core.multi_sketch: ``MultiSketch``
+is the fixed-capacity wire format for S^(F) ∪ Z of a multi-objective
+bottom-k sample, with static half ``MultiSketchSpec`` (objectives (f, k_f),
+scheme, hash seed, capacity). Wire layout: keys/weights/probs/member/aux/
+valid slabs [capacity] plus per-objective seeds [|F|, capacity] and taus
+[|F|]. Its merge invariants:
+
+  * coordination — all parts hash u_x from the same (key, spec.seed), so
+    per-objective samples of a union are unions of per-part samples;
+  * threshold closure — each sketch retains in Z the threshold key (the
+    arg of tau^(f,k_f)) of EVERY objective, so the union's (k_f+1)-th
+    smallest f-seed is always present among the parts' retained keys;
+  * max-weight dedup — a key retained by several parts keeps max w_x
+    (the paper's weight of a merged data set).
+
+  Under these, re-selection over concatenated retained slabs reproduces
+  member set, p^(F) AND taus of the union sample exactly, for any chunking
+  (streaming ``multisketch_absorb``) and any shard fan-in (``all_gather`` +
+  ``multisketch_merge_stacked``). Capacity sum_f k_f + |F| suffices always.
+
+``sketch_estimate`` below is the single HT-estimate implementation shared
+by both formats (they agree on the member/weights/probs/keys fields).
 """
 from __future__ import annotations
 
@@ -101,7 +124,16 @@ def _rebuild(keys, weights, valid, k: int, capacity: int, seed: int) -> Sketch:
     return _compact(sk, sw, s, k, capacity, seed)
 
 
-def sketch_estimate(sk: Sketch, f) -> jnp.ndarray:
-    """HT estimate of Q(f, X) from a sketch."""
-    contrib = jnp.where(sk.member, f(sk.weights) / jnp.maximum(sk.probs, 1e-30), 0.0)
+def sketch_estimate(sk, f, segment_fn=None) -> jnp.ndarray:
+    """HT estimate of Q(f, H) from a sketch (``Sketch`` or ``MultiSketch`` —
+    any record with member/weights/probs/keys fields).
+
+    segment_fn: optional vectorized predicate over keys selecting the
+    segment H (default: the whole data set).
+    """
+    member = sk.member
+    if segment_fn is not None:
+        member = member & jnp.asarray(segment_fn(sk.keys), bool)
+    contrib = jnp.where(member,
+                        f(sk.weights) / jnp.maximum(sk.probs, 1e-30), 0.0)
     return jnp.sum(contrib)

@@ -1,0 +1,379 @@
+"""MultiSketch: the mergeable fixed-capacity multi-objective summary.
+
+This is the device-resident state + wire format for S^(F) ∪ Z of a
+multi-objective bottom-k sample (paper §3.2/§3.3), replacing the ephemeral
+per-call ``MultiBottomK`` wherever a sample must survive across batches
+(streaming), across shards (``all_gather``) or across hosts (telemetry).
+
+Wire format — a pytree of arrays with static half ``MultiSketchSpec``:
+
+  keys    int32   [c]      key ids, -1 on empty slots
+  weights float32 [c]      w_x (merged data sets: max over occurrences)
+  probs   float32 [c]      p_x^(F) = max_f p_x^(f) for members, else 0
+  seeds   float32 [nf, c]  per-objective f-seeds r_x / f(w_x) (+inf invalid)
+  member  bool    [c]      x ∈ S^(F)
+  aux     bool    [c]      x ∈ Z (per-objective threshold keys, see below)
+  valid   bool    [c]      slot occupied
+  taus    float32 [nf]     tau^(f,k_f): the (k_f+1)-th smallest f-seed
+
+  spec (static, hashable, jit-static): objectives ((StatFn, k_f), ...),
+  scheme ('ppswor' | 'priority'), hash seed, capacity.
+
+Merge invariant (paper §3.3 composability): because every per-objective
+sample shares u_x = hash(key, seed), S^(f,k_f) of a union of data sets is
+contained in the union of the parts' S^(f,k_f); and the union's threshold
+key (the arg of tau^(f)) has per-part seed rank <= k_f + 1, so it is a part
+member OR a part threshold key. We therefore retain in Z the threshold key
+of EVERY objective (<= |F| slots — a superset of the paper's
+estimation-only Z, which keeps only thresholds of some member's most
+forgiving objective). With that, re-running selection on the concatenated
+retained keys of any parts reproduces the member set, probabilities AND
+thresholds of the sample the union data set would have produced — exactly.
+Hence ``absorb`` (streaming fold), ``merge`` and ``merge_stacked``
+(post-all_gather) are all the same re-selection and agree with a one-shot
+build over the concatenated data for any chunking and any order.
+
+Capacity: |S^(F)| <= sum_f k_f (hard, each S^(f) holds k_f keys) and
+|Z| <= |F|, so the default capacity sum_f k_f + |F| + 1 never truncates; a
+truncated compaction drops lowest-weight aux slots first and voids the
+exactness guarantee (detectable: multisketch_overflow()).
+
+Selection reuses the PR 1 single-launch batched kernels
+(fused_seeds_fvals + batched block-select) when ``use_kernels`` — the
+default on the host-facing entry points; inside shard_map/manual-collective
+regions callers pass use_kernels=False and get the identical pure-XLA path
+(one stacked top_k), bit-compatible with the kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .bottomk import conditional_prob, f_seed
+from .funcs import StatFn
+from .hashing import uniform01
+
+_INF = jnp.float32(jnp.inf)
+
+# StatFn kind -> seeds-kernel objective code (kernels/seeds.py)
+_KERNEL_KIND = {"sum": 0, "count": 1, "thresh": 2, "cap": 3, "moment": 4}
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiSketchSpec:
+    """Static half of a MultiSketch (hashable -> usable as jit-static arg).
+
+    Two sketches are mergeable iff their specs are equal: same objectives
+    (f, k_f) in the same order, same scheme, same hash seed.
+    """
+
+    objectives: Tuple[Tuple[StatFn, int], ...]
+    scheme: str = "ppswor"
+    seed: int = 0
+    capacity: int = 0  # 0 -> default_capacity()
+
+    def __post_init__(self):
+        if self.scheme not in ("priority", "ppswor"):
+            raise ValueError(
+                f"unknown scheme {self.scheme!r} (want 'priority' or 'ppswor')")
+        object.__setattr__(self, "objectives",
+                           tuple((f, int(k)) for f, k in self.objectives))
+
+    @property
+    def nf(self) -> int:
+        return len(self.objectives)
+
+    @property
+    def kmax(self) -> int:
+        return max(k for _, k in self.objectives)
+
+    def default_capacity(self) -> int:
+        """sum_f k_f + |F| is a HARD bound on |S^(F) ∪ Z|, so this never
+        truncates; the +1 spare slot keeps ``multisketch_overflow`` (slab
+        full => possible truncation) False whenever exactness holds."""
+        return sum(k for _, k in self.objectives) + self.nf + 1
+
+    @property
+    def cap(self) -> int:
+        return self.capacity if self.capacity > 0 else self.default_capacity()
+
+    def kernel_objectives(self) -> Optional[Tuple[Tuple[int, float], ...]]:
+        """(kind, param) encoding for the fused seeds kernel; None if any
+        objective (e.g. combo) has no kernel encoding."""
+        enc = []
+        for f, _ in self.objectives:
+            kind = _KERNEL_KIND.get(f.kind)
+            if kind is None:
+                return None
+            enc.append((kind, float(f.param)))
+        return tuple(enc)
+
+
+class MultiSketch(NamedTuple):
+    """Array half of the summary — a plain pytree: jit/donate/collective
+    friendly. See module docstring for the wire format."""
+
+    keys: jnp.ndarray     # int32 [c]
+    weights: jnp.ndarray  # float32 [c]
+    probs: jnp.ndarray    # float32 [c]
+    seeds: jnp.ndarray    # float32 [nf, c]
+    member: jnp.ndarray   # bool [c]
+    aux: jnp.ndarray      # bool [c]
+    valid: jnp.ndarray    # bool [c]
+    taus: jnp.ndarray     # float32 [nf]
+
+
+def multisketch_empty(spec: MultiSketchSpec) -> MultiSketch:
+    """The identity element of ``merge``/``absorb``."""
+    c, nf = spec.cap, spec.nf
+    return MultiSketch(
+        keys=jnp.full((c,), -1, jnp.int32),
+        weights=jnp.zeros((c,), jnp.float32),
+        probs=jnp.zeros((c,), jnp.float32),
+        seeds=jnp.full((nf, c), _INF, jnp.float32),
+        member=jnp.zeros((c,), bool),
+        aux=jnp.zeros((c,), bool),
+        valid=jnp.zeros((c,), bool),
+        taus=jnp.full((nf,), _INF, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# selection (member/prob/aux/taus over a fixed-shape batch)
+# ---------------------------------------------------------------------------
+
+def multisketch_select(spec: MultiSketchSpec, keys, weights, active,
+                       use_kernels: bool = False, seed=None):
+    """Multi-objective bottom-k selection with the MERGEABLE aux set.
+
+    Returns (member [n], prob [n] = p^(F), aux [n], seeds [nf, n],
+    taus [nf]). Differs from core.multi_objective.multi_bottomk_sample only
+    in Z: aux holds the threshold key of EVERY objective (merge-sufficient
+    superset) instead of the estimation-minimal pruned set; member and prob
+    are identical. ``seed`` (runtime override, may be traced) defaults to
+    the static spec.seed.
+    """
+    keys = jnp.asarray(keys, jnp.int32)
+    w = jnp.asarray(weights, jnp.float32)
+    act = jnp.asarray(active, bool)
+    n = keys.shape[0]
+    nf = spec.nf
+    kks = [min(kf, n) for _, kf in spec.objectives]
+    kmax = max(kks)
+    seed = spec.seed if seed is None else seed
+
+    enc = spec.kernel_objectives()
+    # the seeds kernel bakes the seed in as a compile-time constant; traced
+    # seeds (e.g. per-step reseeding inside a jitted exchange) take the
+    # XLA path, which accepts them at runtime.
+    if use_kernels and enc is not None and isinstance(seed, (int,)):
+        from repro.kernels.blockselect import batched_bottomk_select
+        from repro.kernels.seeds import fused_seeds_fvals
+        seeds, fvals = fused_seeds_fvals(keys, w, act, enc, spec.scheme,
+                                         int(seed))
+        vals, idx, _ = batched_bottomk_select(seeds, kmax + 1)
+    else:
+        u = uniform01(keys, seed)
+        seeds = jnp.stack([f_seed(w, act, f, u, spec.scheme)
+                           for f, _ in spec.objectives])
+        fvals = jnp.stack([jnp.where(act, f(w), 0.0)
+                           for f, _ in spec.objectives])
+        m = min(kmax + 2, n)
+        neg, idx = jax.lax.top_k(-seeds, m)     # ONE scan for all objectives
+        vals, idx = -neg, idx.astype(jnp.int32)
+
+    # per-objective k-th / (k+1)-th smallest + the threshold key's position
+    if vals.shape[1] < kmax + 1:                # n <= kmax: no (k+1)-th seed
+        pad = kmax + 1 - vals.shape[1]
+        vals = jnp.pad(vals, ((0, 0), (0, pad)), constant_values=jnp.inf)
+        idx = jnp.pad(idx, ((0, 0), (0, pad)), constant_values=-1)
+    rows = jnp.arange(nf)
+    kth = vals[rows, jnp.asarray(kks) - 1]                       # [nf]
+    taus = vals[rows, jnp.asarray(kks)]                          # [nf]
+    thr_idx = idx[rows, jnp.asarray(kks)]                        # [nf]
+
+    member_f = (seeds <= kth[:, None]) & jnp.isfinite(seeds)
+    p_f = jnp.where(member_f,
+                    conditional_prob(fvals, taus[:, None], spec.scheme), 0.0)
+    member = member_f.any(axis=0)
+    prob = jnp.where(member, p_f.max(axis=0), 0.0)
+
+    # Z: the (k_f+1)-th smallest-seed key of every objective (if it exists)
+    safe = jnp.where(jnp.isfinite(taus) & (thr_idx >= 0), thr_idx, n)
+    aux = jnp.zeros((n,), bool).at[safe].set(True, mode="drop") & ~member
+    return member, prob, aux, seeds, taus
+
+
+def _compact(spec: MultiSketchSpec, keys, weights, member, prob, aux, seeds,
+             taus, use_kernels: bool) -> MultiSketch:
+    """Compact S^(F) ∪ Z into the fixed-capacity slab (members by weight
+    desc first, then aux). ``keys`` must be key-sorted if duplicates are
+    possible; here they are pre-deduped so order is free."""
+    c = spec.cap
+    keep = member | aux
+    if use_kernels:
+        from repro.kernels.compact import compact_take
+        take, tvalid = compact_take(keys, weights, member, keep, c)
+    else:
+        w = jnp.maximum(jnp.asarray(weights, jnp.float32), 0.0)
+        inv = 1.0 / (1.0 + w)
+        pri = jnp.where(keep & (keys >= 0),
+                        jnp.where(member, inv, 2.0 + inv), _INF)
+        n = pri.shape[0]
+        if n < c:
+            pri = jnp.pad(pri, (0, c - n), constant_values=jnp.inf)
+        neg, take = jax.lax.top_k(-pri, c)
+        tvalid = jnp.isfinite(-neg) & (take < n)
+        take = jnp.where(tvalid, take, 0).astype(jnp.int32)
+    tk = jnp.where(tvalid, take, 0)
+    return MultiSketch(
+        keys=jnp.where(tvalid, jnp.asarray(keys, jnp.int32)[tk], -1),
+        weights=jnp.where(tvalid, jnp.asarray(weights, jnp.float32)[tk], 0.0),
+        probs=jnp.where(tvalid, prob[tk], 0.0),
+        seeds=jnp.where(tvalid[None, :], seeds[:, tk], _INF),
+        member=member[tk] & tvalid,
+        aux=aux[tk] & tvalid,
+        valid=tvalid,
+        taus=taus)
+
+
+def _rebuild(spec: MultiSketchSpec, keys, weights, valid,
+             use_kernels: bool) -> MultiSketch:
+    """Dedup (keep max weight — the paper's w_x for merged data sets),
+    re-select, compact. The shared exact-merge core of absorb/merge."""
+    keys = jnp.asarray(keys, jnp.int32)
+    w = jnp.asarray(weights, jnp.float32)
+    # sort (key asc, VALID first, weight desc): each key's first occurrence
+    # is its max-weight valid one, so the dup mask can never let an invalid
+    # slot shadow a real observation of the same key
+    valid = jnp.asarray(valid, bool)
+    order = jnp.lexsort((-w, ~valid, keys))
+    sk, sw = keys[order], w[order]
+    sv = valid[order]
+    dup = jnp.concatenate([jnp.zeros((1,), bool), sk[1:] == sk[:-1]])
+    act = sv & ~dup & (sk >= 0)
+    member, prob, aux, seeds, taus = multisketch_select(
+        spec, sk, sw, act, use_kernels=use_kernels)
+    return _compact(spec, sk, sw, member, prob, aux, seeds, taus,
+                    use_kernels)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("spec", "use_kernels"))
+def _build_jit(keys, weights, active, *, spec, use_kernels):
+    n = keys.shape[0]
+    npad = max(n, spec.kmax + 2)  # selection needs a (kmax+1)-th candidate
+    if npad > n:
+        keys = jnp.pad(keys, (0, npad - n), constant_values=-1)
+        weights = jnp.pad(weights, (0, npad - n))
+        active = jnp.pad(active, (0, npad - n))
+    member, prob, aux, seeds, taus = multisketch_select(
+        spec, keys, weights, active, use_kernels=use_kernels)
+    return _compact(spec, keys, weights, member, prob, aux, seeds, taus,
+                    use_kernels)
+
+
+def multisketch_build(spec: MultiSketchSpec, keys, weights, active=None,
+                      use_kernels: Optional[bool] = None) -> MultiSketch:
+    """One-shot S^(F) ∪ Z over a batch, compacted to the wire format.
+
+    Assumes distinct keys (as the paper's data model does); duplicate keys
+    in ONE batch are sampled as distinct observations — route repeated keys
+    through ``absorb``/``merge``, which dedup by max weight.
+    """
+    keys = jnp.asarray(keys, jnp.int32)
+    return _build_jit(
+        keys, jnp.asarray(weights, jnp.float32),
+        (jnp.ones(keys.shape, bool) if active is None
+         else jnp.asarray(active, bool)),
+        spec=spec, use_kernels=True if use_kernels is None else use_kernels)
+
+
+def multisketch_absorb_inline(spec: MultiSketchSpec, state: MultiSketch,
+                              keys, weights, active=None,
+                              use_kernels: bool = False) -> MultiSketch:
+    """Pure (un-jitted) fold body: state <- state ∪ chunk.
+
+    For callers that are ALREADY inside a jit trace (a train step folding
+    telemetry, a shard_map exchange) — fuses into the enclosing program.
+    Host callers want :func:`multisketch_absorb` (jitted, donated buffers).
+    """
+    keys = jnp.asarray(keys, jnp.int32).reshape(-1)
+    weights = jnp.asarray(weights, jnp.float32).reshape(-1)
+    active = (jnp.ones(keys.shape, bool) if active is None
+              else jnp.asarray(active, bool).reshape(-1))
+    ck = jnp.concatenate([state.keys, keys])
+    cw = jnp.concatenate([state.weights, weights])
+    cv = jnp.concatenate([state.valid, active])
+    return _rebuild(spec, ck, cw, cv, use_kernels)
+
+
+@partial(jax.jit, static_argnames=("spec", "use_kernels"),
+         donate_argnums=(0,))
+def _absorb_jit(state, keys, weights, active, *, spec, use_kernels):
+    return multisketch_absorb_inline(spec, state, keys, weights, active,
+                                     use_kernels)
+
+
+def multisketch_absorb(state: MultiSketch, keys, weights, active=None, *,
+                       spec: MultiSketchSpec,
+                       use_kernels: Optional[bool] = None) -> MultiSketch:
+    """Device-resident streaming fold: state <- state ∪ chunk.
+
+    jit-compiled per (spec, chunk shape) with the STATE BUFFERS DONATED —
+    the returned sketch reuses the old state's memory, so a training loop
+    folds telemetry with zero host round-trips and zero steady-state
+    allocation. The old ``state`` must not be used again.
+    """
+    keys = jnp.asarray(keys, jnp.int32).reshape(-1)
+    return _absorb_jit(
+        state, keys, jnp.asarray(weights, jnp.float32).reshape(-1),
+        (jnp.ones(keys.shape, bool) if active is None
+         else jnp.asarray(active, bool).reshape(-1)),
+        spec=spec, use_kernels=True if use_kernels is None else use_kernels)
+
+
+@partial(jax.jit, static_argnames=("spec", "use_kernels"))
+def _merge_jit(a, b, *, spec, use_kernels):
+    return _rebuild(spec,
+                    jnp.concatenate([a.keys, b.keys]),
+                    jnp.concatenate([a.weights, b.weights]),
+                    jnp.concatenate([a.valid, b.valid]), use_kernels)
+
+
+def multisketch_merge(spec: MultiSketchSpec, a: MultiSketch, b: MultiSketch,
+                      use_kernels: Optional[bool] = None) -> MultiSketch:
+    """Exact merge of two sketches built under the same spec."""
+    return _merge_jit(a, b, spec=spec,
+                      use_kernels=True if use_kernels is None else use_kernels)
+
+
+def multisketch_merge_stacked(spec: MultiSketchSpec, stacked: MultiSketch,
+                              use_kernels: bool = False) -> MultiSketch:
+    """Merge a stacked batch of sketches (leaves have a leading [m] axis,
+    e.g. straight out of ``all_gather``) in ONE re-selection — no tree
+    reduction. Works inside shard_map (default use_kernels=False)."""
+    return _rebuild(spec, stacked.keys.reshape(-1),
+                    stacked.weights.reshape(-1), stacked.valid.reshape(-1),
+                    use_kernels)
+
+
+def multisketch_overflow(sk: MultiSketch) -> jnp.ndarray:
+    """True iff the slab is full — i.e. compaction MAY have truncated
+    S ∪ Z and the exact-merge guarantee is voided. Never True at the
+    default capacity (one spare slot past the hard |S ∪ Z| bound)."""
+    return jnp.all(sk.valid)
+
+
+def multisketch_estimate(sk: MultiSketch, f: StatFn,
+                         segment_fn=None) -> jnp.ndarray:
+    """HT estimate of Q(f, H) from the sketch (paper Eq. 5: inverse
+    p^(F) weighting). ``segment_fn``: vectorized key predicate for H."""
+    from .merge import sketch_estimate
+    return sketch_estimate(sk, f, segment_fn)

@@ -13,7 +13,9 @@ gradient:
   F       = {(sum, k), (cap_c, k), (count, k)} — one coordinated sample
             serves the gradient estimate (sum), heavy-hitter-robust mass
             (cap), and support statistics simultaneously (Thm 3.1);
-  wire    = 3k slots of (idx, val, prob) per device pair over DCN;
+  wire    = a fixed 3k-slot MultiSketch slab (core.multi_sketch wire
+            format; keys/weights/probs/valid gathered, seeds/taus local)
+            per device pair over DCN;
   merge   = own pod's shard stays EXACT; remote pods' contributions are HT
             estimates (Eq. 5) — unbiased for the pod-mean gradient with
             strictly less variance than sampling both sides.
@@ -35,59 +37,64 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import cap, COUNT, SUM
-from repro.core.bottomk import conditional_prob, f_seed, kth_and_tau
-from repro.core.hashing import uniform01
-
-_OBJECTIVES = lambda cap_frac: ((SUM, "sum"), (cap(cap_frac), "cap"),
-                                (COUNT, "count"))
+from repro.core.multi_sketch import (MultiSketch, MultiSketchSpec,
+                                     multisketch_select)
+from repro.launch.mesh import shard_map_compat
 
 
-def _sample_leaf(g, k: int, seed, cap_frac: float, scheme: str = "ppswor"):
-    """Multi-objective bottom-k sample of one (shard of a) gradient leaf.
+def _leaf_spec(k: int, cap_frac: float, scheme: str) -> MultiSketchSpec:
+    """The coordinated objective set F of the gradient exchange."""
+    return MultiSketchSpec(
+        objectives=((SUM, k), (cap(cap_frac), k), (COUNT, k)),
+        scheme=scheme, capacity=3 * k)
 
-    Returns (idx [3k], val [3k], prob [3k], valid [3k]) — fixed wire size;
-    the union S^(F) occupies a random prefix of the slots (paper §3.3:
-    E|S^(F)| <= sum k_f).
+
+def _sample_leaf(g, k: int, seed, cap_frac: float,
+                 scheme: str = "ppswor") -> MultiSketch:
+    """Multi-objective bottom-k sample of one (shard of a) gradient leaf,
+    as a fixed-capacity MultiSketch wire slab (3k slots, members first).
+
+    Selection is core.multi_sketch.multisketch_select (pure-XLA path: this
+    runs inside a fully-manual shard_map, and the per-(step, pod) reseed is
+    traced). The sketch's ``weights`` slab carries the SIGNED gradient
+    entries — probabilities were computed from the normalized |g| weights —
+    so the HT merge reads contributions directly off the wire. Aux slots
+    are dropped: pods hold disjoint key spaces, so the exchange never
+    re-selects across pods (§2.5 composability keeps the union estimator
+    exact); only members carry HT mass.
     """
     flat = g.reshape(-1).astype(jnp.float32)
     n = flat.shape[0]
     w = jnp.abs(flat)
     wmax = jnp.maximum(jnp.max(w), 1e-30)
     wn = w / wmax                                   # weights in (0,1]
-    active = wn > 0
-    u = uniform01(jnp.arange(n, dtype=jnp.int32), seed)
-
-    kk = min(k, n)
-    # Batched over the (static) 3 objectives: stack the shared-u_x seeds
-    # [3, n], then ONE top_k(k+1) scan yields every kth and tau — no
-    # per-objective scans, no second pass for the threshold.
-    objs = _OBJECTIVES(cap_frac)
-    seeds_F = jnp.stack([f_seed(wn, active, f, u, scheme) for f, _ in objs])
-    fv_F = jnp.stack([jnp.where(active, f(wn), 0.0) for f, _ in objs])
-    kth, tau = kth_and_tau(seeds_F, kk)
-    member_F = (seeds_F <= kth[:, None]) & jnp.isfinite(seeds_F)
-    p_F = jnp.where(member_F,
-                    conditional_prob(fv_F, tau[:, None], scheme), 0.0)
-    member = member_F.any(axis=0)
-    prob = p_F.max(axis=0)                          # p^(F) = max_f p^(f)
+    spec = _leaf_spec(min(k, n), cap_frac, scheme)
+    keys = jnp.arange(n, dtype=jnp.int32)
+    member, prob, _aux, seeds, taus = multisketch_select(
+        spec, keys, wn, (wn > 0), use_kernels=False, seed=seed)
 
     # compact members into 3k fixed slots (members first)
-    slots = 3 * kk
+    slots = spec.cap
     order = jnp.argsort(~member)                    # members first
     take = order[:slots]
     valid = member[take]
-    return (jnp.where(valid, take, 0).astype(jnp.int32),
-            jnp.where(valid, flat[take], 0.0),
-            jnp.where(valid, prob[take], 1.0),
-            valid)
+    return MultiSketch(
+        keys=jnp.where(valid, take, -1).astype(jnp.int32),
+        weights=jnp.where(valid, flat[take], 0.0),  # signed payload
+        probs=jnp.where(valid, prob[take], 1.0),
+        seeds=jnp.where(valid[None, :], seeds[:, take], jnp.inf),
+        member=valid,
+        aux=jnp.zeros_like(valid),
+        valid=valid,
+        taus=taus)
 
 
 def _merge_leaf(idx, val, prob, valid, n, npods):
-    """HT-estimate the mean gradient from gathered per-pod samples
+    """HT-estimate the mean gradient from gathered per-pod sketch slabs
     (all-sampled variant; benchmarks use this single-pod)."""
     contrib = jnp.where(valid, val / jnp.maximum(prob, 1e-30), 0.0)
     dense = jnp.zeros((n,), jnp.float32)
-    dense = dense.at[idx.reshape(-1)].add(contrib.reshape(-1))
+    dense = dense.at[jnp.maximum(idx, 0).reshape(-1)].add(contrib.reshape(-1))
     return dense / npods
 
 
@@ -112,11 +119,11 @@ def compressed_grads_fn(compute_grads, mesh, *, axis: str = "pod",
 
         bspec = jax.tree.map(lambda _: P(axis), batch)
         rep = jax.tree.map(lambda _: P(), params)
-        loss, metrics, grads = jax.shard_map(
-            grads_body, mesh=mesh,
+        loss, metrics, grads = shard_map_compat(
+            grads_body, mesh,
             in_specs=(rep, bspec, ),
             out_specs=(P(), P(), rep),
-            axis_names={axis}, check_vma=False)(params, batch)
+            axis_names={axis})(params, batch)
 
         # ---- sm2: fully-manual sampled exchange -------------------------
         flat, treedef = jax.tree_util.tree_flatten(grads)
@@ -135,18 +142,20 @@ def compressed_grads_fn(compute_grads, mesh, *, axis: str = "pod",
                      + step_.astype(jnp.uint32))
                 flat_g = g.reshape(-1)
                 n = flat_g.shape[0]
-                idx, val, prob, valid = _sample_leaf(flat_g, k, s, cap_frac)
-                gi = jax.lax.all_gather(idx, axis)
-                gv = jax.lax.all_gather(val, axis)
-                gp = jax.lax.all_gather(prob, axis)
-                gm = jax.lax.all_gather(valid, axis)
+                sk = _sample_leaf(flat_g, k, s, cap_frac)
+                # ship the sketch's HT slabs (keys/weights/probs/valid);
+                # seeds/taus are recomputable and stay pod-local
+                gi = jax.lax.all_gather(sk.keys, axis)
+                gv = jax.lax.all_gather(sk.weights, axis)
+                gp = jax.lax.all_gather(sk.probs, axis)
+                gm = jax.lax.all_gather(sk.valid, axis)
                 total = jnp.zeros((n,), jnp.float32)
                 est_self = jnp.zeros((n,), jnp.float32)
                 for p_ in range(npods):
                     contrib = jnp.where(
                         gm[p_], gv[p_] / jnp.maximum(gp[p_], 1e-30), 0.0)
-                    est_p = jnp.zeros((n,), jnp.float32).at[gi[p_]].add(
-                        contrib)
+                    est_p = jnp.zeros((n,), jnp.float32).at[
+                        jnp.maximum(gi[p_], 0)].add(contrib)
                     total = total + est_p
                     est_self = est_self + jnp.where(pod == p_, est_p, 0.0)
                 dense = (total - est_self
@@ -155,10 +164,10 @@ def compressed_grads_fn(compute_grads, mesh, *, axis: str = "pod",
             return tuple(out)
 
         specs = tuple(flat_specs)
-        new_flat = jax.shard_map(
-            exchange, mesh=mesh,
+        new_flat = shard_map_compat(
+            exchange, mesh,
             in_specs=(P(),) + specs, out_specs=specs,
-            axis_names=all_axes, check_vma=False)(step, *flat)
+            axis_names=all_axes)(step, *flat)
         grads = jax.tree_util.tree_unflatten(treedef, new_flat)
         return loss, metrics, grads
 

@@ -15,9 +15,10 @@ from .rankcount import rank_counts
 from .blockselect import (
     batched_block_bottomk, batched_bottomk_select, block_bottomk,
     bottomk_select)
+from .compact import compact_take, retention_priority
 from . import ops, ref
 
 __all__ = ["fused_seeds", "fused_seeds_fvals", "rank_counts",
            "block_bottomk", "bottomk_select", "batched_block_bottomk",
-           "batched_bottomk_select", "default_interpret",
-           "resolve_interpret", "ops", "ref"]
+           "batched_bottomk_select", "compact_take", "retention_priority",
+           "default_interpret", "resolve_interpret", "ops", "ref"]

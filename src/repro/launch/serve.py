@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.configs.registry import get_config, get_smoke_config, list_archs
 from repro.core import SUM, COUNT, thresh
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, mesh_context
 from repro.models import model as Mod
 from repro.telemetry.stats import StatsCollector, TelemetryConfig
 
@@ -42,7 +42,7 @@ def main(argv=None):
     key = jax.random.PRNGKey(args.seed)
     max_len = args.prompt_len + args.gen
 
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         params, _ = Mod.init_model(key, cfg)
         prompts = jax.random.randint(key, (args.batch, args.prompt_len),
                                      0, cfg.vocab_size)
@@ -54,14 +54,7 @@ def main(argv=None):
 
         t0 = time.time()
         logits, cache = Mod.prefill(params, cfg, batch)
-        # grow attention caches to max_len
-        def grow(leaf, path=""):
-            return leaf
-        if isinstance(cache, dict) and "k" in cache:
-            pad = [(0, 0)] * cache["k"].ndim
-            pad[2] = (0, args.gen)
-            cache["k"] = jnp.pad(cache["k"], pad)
-            cache["v"] = jnp.pad(cache["v"], pad)
+        cache = Mod.grow_cache(cfg, cache, args.gen)  # room for decode steps
         t_prefill = time.time() - t0
 
         decode = jax.jit(lambda p, t, c, i: Mod.serve_step(p, cfg, t, c, i))
@@ -83,8 +76,11 @@ def main(argv=None):
         print("generated token ids (first row):",
               np.asarray(gen[0])[:12].tolist())
 
-        # request telemetry: universal sample over request sizes
-        tel = StatsCollector(TelemetryConfig())
+        # request telemetry: device-resident MultiSketch fold over request
+        # sizes — a sharded server keeps this state resident and merges the
+        # fixed-size slabs across replicas (core.multi_sketch invariants).
+        tel = StatsCollector(TelemetryConfig(
+            objectives=((SUM, 64), (COUNT, 64), (thresh(16.0), 64))))
         tel.absorb(np.arange(args.batch),
                    np.full(args.batch, float(args.prompt_len + args.gen)))
         print("[telemetry] est total tokens served:", tel.query(SUM))

@@ -13,6 +13,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core.multi_sketch import (MultiSketchSpec,
+                                     multisketch_absorb_inline)
 from repro.models import model as Mod
 from repro.models.config import ModelConfig
 from repro.optim import adamw
@@ -89,7 +91,8 @@ def cache_abstract(cfg: ModelConfig, shape: ShapeConfig):
 def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig, mesh,
                     grad_transform=None, microbatch: Optional[int] = None,
                     donate: bool = True, shape: Optional[ShapeConfig] = None,
-                    compress: Optional[dict] = None):
+                    compress: Optional[dict] = None,
+                    telemetry: Optional[MultiSketchSpec] = None):
     """Returns (jitted_step, state_shardings_tree).
 
     grad_transform: optional fn(grads, params, step) -> grads applied between
@@ -100,8 +103,17 @@ def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig, mesh,
     "pod" axis, the cross-pod gradient reduction becomes the paper's sampled
     exchange (multi-objective bottom-k sketches over DCN) instead of a dense
     all-reduce.
+    telemetry: if set (a MultiSketchSpec), the train state carries a
+    device-resident MultiSketch under key "tel" and every step folds the
+    per-example loss proxies into it INSIDE the jitted step (donated
+    buffers, no host round-trip) — queryable any time via sketch_estimate.
     """
     st_shard, _ = state_shardings(cfg, mesh)
+    if telemetry is not None:
+        from repro.launch.summary import multisketch_shape
+        rep = Sh.replicated(mesh)
+        st_shard["tel"] = jax.tree.map(lambda _: rep,
+                                       multisketch_shape(telemetry))
     batch_sh = (Sh.batch_shardings(input_specs(cfg, shape), mesh)
                 if shape is not None else None)
 
@@ -164,8 +176,19 @@ def make_train_step(cfg: ModelConfig, opt_cfg: adamw.OptConfig, mesh,
 
         new_params, new_opt, om = adamw.apply_updates(
             params, grads, state["opt"], opt_cfg)
-        return ({"params": new_params, "opt": new_opt},
-                {"loss": loss, **metrics, **om})
+        new_state = {"params": new_params, "opt": new_opt}
+        if telemetry is not None:
+            # fold per-example loss proxies keyed step * 2^16 + example. The
+            # stride is a CONSTANT (not the batch size) so keys stay unique
+            # across a resume with a different --batch; bounds: b <= 65536
+            # per step, step < 32768 before int32 wrap (past either, keys
+            # collide and the dedup silently merges observations)
+            b = jax.tree_util.tree_leaves(batch)[0].shape[0]
+            step_id = state["opt"]["step"].astype(jnp.int32)
+            tkeys = step_id * jnp.int32(1 << 16) + jnp.arange(b, dtype=jnp.int32)
+            new_state["tel"] = multisketch_absorb_inline(
+                telemetry, state["tel"], tkeys, jnp.full((b,), loss))
+        return (new_state, {"loss": loss, **metrics, **om})
 
     jitted = jax.jit(
         step_fn,

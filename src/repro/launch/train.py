@@ -19,17 +19,16 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.ckpt.manager import CheckpointManager
 from repro.configs.registry import get_config, get_smoke_config, list_archs
-from repro.core import SUM, cap, thresh
+from repro.core import (COUNT, SUM, MultiSketchSpec, multisketch_empty,
+                        sketch_estimate, thresh)
 from repro.data.pipeline import DataConfig, Loader, SyntheticCorpus
 from repro.launch import steps as St
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_host_mesh, mesh_context
 from repro.models import model as Mod
 from repro.optim import adamw
-from repro.telemetry.stats import StatsCollector, TelemetryConfig
 
 
 def parse_mesh(spec: str):
@@ -71,21 +70,34 @@ def main(argv=None):
                       n_docs=20_000)
     corpus = SyntheticCorpus(dcfg)
     loader = Loader(corpus, dcfg, importance=args.importance_sampling)
-    telemetry = StatsCollector(TelemetryConfig())
+    # device-resident per-step telemetry: folded INSIDE the jitted train
+    # step (donated MultiSketch state), merged/queried whenever asked
+    tel_spec = MultiSketchSpec(
+        objectives=((SUM, 64), (COUNT, 64), (thresh(5.0), 64)), seed=1234)
     mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
 
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         step_fn, st_sh = St.make_train_step(
             cfg, opt_cfg, mesh, donate=False,
             microbatch=args.microbatch or None,
-            compress=dict(k=256, min_size=65536) if args.compress else None)
+            compress=dict(k=256, min_size=65536) if args.compress else None,
+            telemetry=tel_spec)
 
         params, _ = Mod.init_model(jax.random.PRNGKey(args.seed), cfg)
-        state = {"params": params, "opt": adamw.init_opt_state(params)}
+        state = {"params": params, "opt": adamw.init_opt_state(params),
+                 "tel": multisketch_empty(tel_spec)}
         state = jax.device_put(state, st_sh)
         start = 0
         if mgr and args.resume:
             restored, rstep = mgr.restore_latest(state, st_sh)
+            if restored is None:
+                # checkpoints from before the telemetry sketch lack the
+                # "tel" arrays — restore params/opt and start telemetry fresh
+                core_tpl = {kk: state[kk] for kk in ("params", "opt")}
+                core_sh = {kk: st_sh[kk] for kk in ("params", "opt")}
+                restored, rstep = mgr.restore_latest(core_tpl, core_sh)
+                if restored is not None:
+                    restored = {**restored, "tel": state["tel"]}
             if restored is not None:
                 state, start = restored, rstep
                 print(f"[train] resumed from step {start}")
@@ -108,12 +120,6 @@ def main(argv=None):
                 dt = (time.time() - t0) / max(step - start + 1, 1)
                 print(f"step {step+1:5d} loss {loss:8.4f} gnorm {gn:8.3f} "
                       f"{dt*1e3:7.1f} ms/step", flush=True)
-            # telemetry: per-example loss proxies keyed by (step, doc)
-            if (step + 1) % args.log_every == 0:
-                keys = (np.int64(step) << 20) + np.arange(len(raw["docs"]))
-                telemetry.absorb(keys.astype(np.int32),
-                                 np.full(len(raw["docs"]),
-                                         float(metrics["loss"])))
             if mgr and ((step + 1) % args.ckpt_every == 0 or preempted["flag"]):
                 mgr.save(step + 1, state, blocking=False)
             if preempted["flag"]:
@@ -124,11 +130,14 @@ def main(argv=None):
         if mgr:
             mgr.save(args.steps, state, blocking=True)
 
-        # telemetry demo: universal sample answers several f-statistics
-        print("[telemetry] sketch size:", telemetry.size())
-        print("[telemetry] est total loss mass:", telemetry.query(SUM))
+        # telemetry demo: the device-resident multi-objective summary
+        # answers several f-statistics over the whole training history
+        tel = state["tel"]
+        print("[telemetry] sketch size:", int(jnp.sum(tel.member)))
+        print("[telemetry] est total loss mass:",
+              float(sketch_estimate(tel, SUM)))
         print("[telemetry] est #obs with loss>=5:",
-              telemetry.query(thresh(5.0)))
+              float(sketch_estimate(tel, thresh(5.0))))
     return state
 
 

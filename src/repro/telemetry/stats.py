@@ -1,73 +1,94 @@
-"""Streaming training telemetry via mergeable universal samples.
+"""Streaming training telemetry via mergeable multi-objective summaries.
 
-Any stream of (key, weight) pairs produced during training — per-token
-losses, per-example grad norms, router loads, activation magnitudes — is
-absorbed into a fixed-size universal monotone sketch (core.merge.Sketch).
-Sketches merge across steps (streaming) and across hosts (all_gather of the
-fixed-size arrays), after which ANY monotone f-statistic over ANY key
-segment can be estimated with gold-standard CV (paper Thm 5.1/§5.1):
-"how many tokens had loss >= 5?", "what is the total loss mass in domain
-d?", "capped-at-T contribution of the worst examples?" — all from one
-sketch, long after the raw stream is gone.
+Any stream of (key, weight) pairs produced during training or serving —
+per-token losses, per-example grad norms, router loads, request sizes — is
+folded into a fixed-capacity ``MultiSketch`` (core.multi_sketch). The fold
+is a single jit-compiled device function with donated state buffers: no
+per-batch Python rebuild, no host round-trip, no steady-state allocation.
+Sketches merge exactly across steps (streaming), across collectors and
+across hosts (``all_gather`` of the fixed-size slabs + one re-selection),
+after which any f-statistic over any key segment is one HT sum away:
+"how many tokens had loss >= 5?", "total loss mass in domain d?" — all
+from one resident sketch, long after the raw stream is gone.
+
+``StatsCollector`` is the thin host wrapper: it buckets ragged batch sizes
+(to bound jit retraces), owns the device-resident state, and routes queries
+through ``core.merge.sketch_estimate``.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (Sketch, build_sketch, estimate, merge_sketches,
-                        sketch_capacity, universal_monotone_sample)
+from repro.core import (COUNT, SUM, MultiSketch, MultiSketchSpec,
+                        multisketch_absorb, multisketch_empty,
+                        multisketch_merge, sketch_estimate)
 from repro.core.funcs import StatFn
 
 
 @dataclasses.dataclass
 class TelemetryConfig:
-    k: int = 64
+    k: int = 64          # per-objective sample size for default objectives
     capacity: int = 1024
     seed: int = 1234
+    scheme: str = "ppswor"
+    # objectives default to ((SUM, k), (COUNT, k)): mass + support queries
+    objectives: Tuple[Tuple[StatFn, int], ...] = ()
+    chunk: int = 256     # absorb pad quantum (bounds jit retraces)
+
+    def spec(self) -> MultiSketchSpec:
+        objs = self.objectives or ((SUM, self.k), (COUNT, self.k))
+        return MultiSketchSpec(objectives=objs, scheme=self.scheme,
+                               seed=self.seed, capacity=self.capacity)
 
 
 class StatsCollector:
-    """Host-side accumulator of a mergeable universal sample.
+    """Host handle on a device-resident mergeable multi-objective sample.
 
-    ``absorb(keys, weights)`` folds a new batch of keyed observations in;
-    ``query(f, segment_fn)`` estimates Q(f, H). Keys must be globally unique
-    per observation (e.g. step << 32 | position) — shared hashing makes the
-    same key land identically on every host (coordination, paper §1).
+    ``absorb(keys, weights)`` folds a batch of keyed observations into the
+    donated device state; ``query(f, segment_fn)`` estimates Q(f, H). Keys
+    must be globally unique per observation (e.g. step * batch + position,
+    staying within int32) — shared hashing makes the same key land
+    identically on every host (coordination, paper §1), so cross-host
+    merges stay exact. A key REPEATED across absorbs is instead treated as
+    the same element re-observed and keeps its max weight.
     """
 
     def __init__(self, cfg: TelemetryConfig):
         self.cfg = cfg
-        self.sketch: Sketch | None = None
+        self.spec = cfg.spec()
+        self.state: MultiSketch = multisketch_empty(self.spec)
 
+    # -- streaming fold ----------------------------------------------------
     def absorb(self, keys, weights):
-        keys = jnp.asarray(keys, jnp.int32).reshape(-1)
-        weights = jnp.asarray(weights, jnp.float32).reshape(-1)
+        keys = np.asarray(keys, np.int32).reshape(-1)
+        weights = np.asarray(weights, np.float32).reshape(-1)
         active = weights > 0
-        new = build_sketch(keys, weights, active, self.cfg.k,
-                           self.cfg.capacity, seed=self.cfg.seed)
-        self.sketch = (new if self.sketch is None
-                       else merge_sketches(self.sketch, new))
+        n = keys.shape[0]
+        npad = max(self.cfg.chunk, -(-n // self.cfg.chunk) * self.cfg.chunk)
+        if npad > n:  # pad to the chunk quantum so jit traces stay bounded
+            keys = np.pad(keys, (0, npad - n), constant_values=-1)
+            weights = np.pad(weights, (0, npad - n))
+            active = np.pad(active, (0, npad - n))
+        self.state = multisketch_absorb(self.state, keys, weights, active,
+                                        spec=self.spec)
 
     def merge_from(self, other: "StatsCollector"):
-        if other.sketch is not None:
-            self.sketch = (other.sketch if self.sketch is None
-                           else merge_sketches(self.sketch, other.sketch))
+        assert other.spec == self.spec, "collectors must share a spec"
+        self.state = multisketch_merge(self.spec, self.state, other.state)
 
+    # -- queries -----------------------------------------------------------
     def query(self, f: StatFn, segment_fn=None) -> float:
         """Estimate Q(f, H); segment_fn: vectorized predicate over keys."""
-        if self.sketch is None:
-            return 0.0
-        sk = self.sketch
-        member = sk.member
-        if segment_fn is not None:
-            member = member & jnp.asarray(segment_fn(sk.keys), bool)
-        contrib = jnp.where(member,
-                            f(sk.weights) / jnp.maximum(sk.probs, 1e-30), 0.0)
-        return float(jnp.sum(contrib))
+        return float(sketch_estimate(self.state, f, segment_fn))
 
     def size(self) -> int:
-        return 0 if self.sketch is None else int(self.sketch.member.sum())
+        return int(jnp.sum(self.state.member))
+
+    @property
+    def sketch(self) -> MultiSketch:
+        """The wire-format state (e.g. for all_gather / checkpointing)."""
+        return self.state

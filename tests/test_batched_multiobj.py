@@ -165,20 +165,27 @@ def test_rank_counts_ragged_n(rng):
 
 
 def test_sample_leaf_single_scan_fixed_slots(rng):
-    """distopt wire format invariants after the batched top_k(k+1) rewrite."""
+    """distopt wire format invariants (a fixed 3k-slot MultiSketch slab)."""
     from repro.distopt.compression import _merge_leaf, _sample_leaf
     n, k = 4096, 64
     g = (rng.standard_normal(n) * (rng.random(n) < 0.3)).astype(np.float32)
-    idx, val, prob, valid = _sample_leaf(jnp.asarray(g), k, 7, 0.01)
-    assert idx.shape == val.shape == prob.shape == valid.shape == (3 * k,)
-    assert bool(jnp.all((prob > 0) & (prob <= 1.0)))
-    assert bool(jnp.all(jnp.where(valid, jnp.asarray(g)[idx] == val, True)))
-    # members occupy a prefix of the slots
+    sk = _sample_leaf(jnp.asarray(g), k, 7, 0.01)
+    assert (sk.keys.shape == sk.weights.shape == sk.probs.shape
+            == sk.valid.shape == (3 * k,))
+    assert sk.seeds.shape == (3, 3 * k) and sk.taus.shape == (3,)
+    assert bool(jnp.all((sk.probs > 0) & (sk.probs <= 1.0)))
+    assert bool(jnp.all(jnp.where(
+        sk.valid, jnp.asarray(g)[jnp.maximum(sk.keys, 0)] == sk.weights,
+        True)))
+    # members occupy a prefix of the slots; empty slots carry key -1
+    valid = sk.valid
     first_invalid = int(jnp.argmin(valid)) if not bool(valid.all()) else 3 * k
     assert bool(jnp.all(~valid[first_invalid:]))
+    assert bool(jnp.all(jnp.where(valid, sk.keys >= 0, sk.keys == -1)))
     # HT estimate is exact when every nonzero is sampled (k >= nnz)
     g_small = np.zeros(512, np.float32)
     g_small[:40] = rng.standard_normal(40).astype(np.float32)
-    idx, val, prob, valid = _sample_leaf(jnp.asarray(g_small), 64, 3, 0.01)
-    est = _merge_leaf(idx[None], val[None], prob[None], valid[None], 512, 1)
+    sk = _sample_leaf(jnp.asarray(g_small), 64, 3, 0.01)
+    est = _merge_leaf(sk.keys[None], sk.weights[None], sk.probs[None],
+                      sk.valid[None], 512, 1)
     np.testing.assert_allclose(np.asarray(est), g_small, atol=1e-5)

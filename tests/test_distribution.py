@@ -20,13 +20,14 @@ _SCRIPT = textwrap.dedent("""
     from repro.launch import sharding as Sh
     from repro.optim import adamw
     from repro.models import model as Mod
+    from repro.launch.mesh import mesh_context
 
     out = {}
     mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
     cfg = get_smoke_config("qwen2-1.5b")
     key = jax.random.PRNGKey(0)
     opt = adamw.OptConfig(total_steps=50, warmup_steps=2, peak_lr=5e-3)
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         params, _ = Mod.init_model(key, cfg)
         batch = {"tokens": jax.random.randint(key, (8, 32), 0,
                                               cfg.vocab_size)}

@@ -1,0 +1,243 @@
+"""MultiSketch subsystem tests: streaming-fold / merge / sharded-build
+equivalence with the one-shot sample (exactness acceptance criteria), the
+Pallas compaction kernel, and collector segment-query accuracy."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.core as C
+from repro.telemetry.stats import StatsCollector, TelemetryConfig
+
+
+def _objectives(nf):
+    pool = [(C.SUM, 16), (C.COUNT, 8), (C.thresh(2.0), 12), (C.cap(1.5), 8),
+            (C.moment(1.5), 8), (C.thresh(0.5), 8), (C.cap(4.0), 8),
+            (C.moment(0.5), 8)]
+    return tuple(pool[:nf])
+
+
+def _data(n=2500, seed=0):
+    rng = np.random.default_rng(seed)
+    keys = rng.permutation(np.arange(5, 5 + n)).astype(np.int32)
+    w = rng.lognormal(0, 1.5, n).astype(np.float32)
+    return keys, w
+
+
+def _members(sk):
+    m = np.asarray(sk.member)
+    return dict(zip(np.asarray(sk.keys)[m].tolist(),
+                    np.asarray(sk.probs)[m].tolist()))
+
+
+def _reference(keys, w, objs, scheme, seed):
+    ref = C.multi_bottomk_sample(keys, w, np.ones(len(keys), bool), objs,
+                                 scheme=scheme, seed=seed)
+    m = np.asarray(ref.member)
+    return (dict(zip(keys[m].tolist(), np.asarray(ref.prob)[m].tolist())),
+            np.asarray(ref.taus))
+
+
+def _assert_same_sample(got: dict, want: dict):
+    assert set(got) == set(want), sorted(set(got) ^ set(want))[:5]
+    for k in want:
+        assert abs(got[k] - want[k]) < 1e-5, (k, got[k], want[k])
+
+
+@pytest.mark.parametrize("scheme", ["ppswor", "priority"])
+@pytest.mark.parametrize("nf", [1, 3, 8])
+def test_streaming_fold_matches_one_shot(scheme, nf):
+    """Absorbing any chunking in any order == one-shot sample (member set,
+    probs AND taus) — the §3.3 mergeability acceptance criterion."""
+    keys, w = _data()
+    objs = _objectives(nf)
+    spec = C.MultiSketchSpec(objectives=objs, scheme=scheme, seed=11)
+    want, want_taus = _reference(keys, w, objs, scheme, 11)
+
+    rng = np.random.default_rng(1)
+    for m, order_seed in ((3, 0), (7, 1)):
+        perm = np.random.default_rng(order_seed).permutation(len(keys))
+        st = C.multisketch_empty(spec)
+        for ch in np.array_split(perm, m):
+            st = C.multisketch_absorb(st, keys[ch], w[ch], spec=spec)
+        _assert_same_sample(_members(st), want)
+        np.testing.assert_allclose(np.asarray(st.taus), want_taus, rtol=1e-6)
+
+
+def test_merge_and_merge_stacked_match_one_shot():
+    keys, w = _data(n=3000, seed=3)
+    objs = _objectives(3)
+    spec = C.MultiSketchSpec(objectives=objs, seed=2)
+    want, want_taus = _reference(keys, w, objs, "ppswor", 2)
+
+    halves = np.array_split(np.arange(len(keys)), 2)
+    a = C.multisketch_build(spec, keys[halves[0]], w[halves[0]])
+    b = C.multisketch_build(spec, keys[halves[1]], w[halves[1]])
+    m = C.multisketch_merge(spec, a, b)
+    _assert_same_sample(_members(m), want)
+
+    parts = [C.multisketch_build(spec, keys[i::4], w[i::4])
+             for i in range(4)]
+    stacked = C.MultiSketch(*jax.tree.map(lambda *xs: jnp.stack(xs), *parts))
+    ms = C.multisketch_merge_stacked(spec, stacked)
+    _assert_same_sample(_members(ms), want)
+    np.testing.assert_allclose(np.asarray(ms.taus), want_taus, rtol=1e-6)
+
+
+def test_merge_dedups_by_max_weight():
+    """A key seen by two parts keeps max w (paper's merged-weight rule)."""
+    spec = C.MultiSketchSpec(objectives=((C.SUM, 4),), seed=0)
+    a = C.multisketch_build(spec, np.arange(6), np.full(6, 2.0, np.float32))
+    b = C.multisketch_build(spec, np.arange(6),
+                            np.array([9., 1., 1., 1., 1., 1.], np.float32))
+    m = C.multisketch_merge(spec, a, b)
+    got_w = {int(k): float(v) for k, v, ok in
+             zip(np.asarray(m.keys), np.asarray(m.weights),
+                 np.asarray(m.valid)) if ok}
+    assert got_w[0] == 9.0
+    assert all(v == 2.0 for k, v in got_w.items() if k != 0)
+
+
+def test_inactive_duplicate_does_not_shadow_observation():
+    """Regression: an INVALID higher-weight occurrence of a key in the same
+    fold must not knock out the valid observation via the dedup mask."""
+    spec = C.MultiSketchSpec(objectives=((C.SUM, 4),), seed=0)
+    st = C.multisketch_empty(spec)
+    st = C.multisketch_absorb(st, np.array([7, 7]),
+                              np.array([5.0, 3.0], np.float32),
+                              np.array([False, True]), spec=spec)
+    m = np.asarray(st.member)
+    assert int(m.sum()) == 1
+    assert int(np.asarray(st.keys)[m][0]) == 7
+    assert float(np.asarray(st.weights)[m][0]) == 3.0
+
+
+def test_xla_and_kernel_paths_identical():
+    keys, w = _data(n=2048, seed=5)
+    objs = _objectives(3)
+    spec = C.MultiSketchSpec(objectives=objs, seed=7)
+    a = C.multisketch_build(spec, keys, w, use_kernels=True)
+    b = C.multisketch_build(spec, keys, w, use_kernels=False)
+    np.testing.assert_array_equal(np.asarray(a.keys), np.asarray(b.keys))
+    np.testing.assert_array_equal(np.asarray(a.probs), np.asarray(b.probs))
+    np.testing.assert_array_equal(np.asarray(a.taus), np.asarray(b.taus))
+
+
+def test_compact_kernel_priority_and_dedup():
+    """kernels.compact: members (weight desc) first, aux next, dups/invalid
+    dropped — against a plain-numpy oracle."""
+    from repro.kernels.compact import compact_take
+    keys = jnp.asarray([-1, 2, 2, 3, 5, 5, 7, 9], jnp.int32)  # key-sorted
+    w = jnp.asarray([9., 5., 4., 1., 7., 2., 3., 6.], jnp.float32)
+    member = jnp.asarray([1, 0, 0, 1, 1, 0, 0, 0], bool)
+    keep = jnp.asarray([1, 1, 1, 1, 1, 1, 0, 1], bool)
+    take, valid = compact_take(keys, w, member, keep, 6)
+    # retained: members {3(w1), 5(w7)} (slot0 invalid key, dup 5 dropped),
+    # then aux {2(w5), 9(w6)}; dup-2, non-keep-7 dropped
+    assert np.asarray(valid).tolist() == [True] * 4 + [False] * 2
+    assert np.asarray(take)[:4].tolist() == [4, 3, 7, 1]
+
+
+def test_stats_collector_streaming_and_segments():
+    """Device-fold collector: chunked absorb accuracy on whole-set and
+    segment queries vs exact sums (satellite acceptance)."""
+    tel = StatsCollector(TelemetryConfig(k=48, capacity=512, seed=9))
+    rng = np.random.default_rng(0)
+    all_k, all_w = [], []
+    for step in range(12):
+        m = int(rng.integers(40, 160))           # ragged chunks
+        w = rng.lognormal(0, 1, m).astype(np.float32)
+        keys = step * 1000 + np.arange(m)
+        tel.absorb(keys, w)
+        all_k.append(keys)
+        all_w.append(w)
+    keys = np.concatenate(all_k)
+    w = np.concatenate(all_w)
+    slack = 4 / np.sqrt(47)                      # ~4 sigma at k=48
+    assert abs(tel.query(C.SUM) / w.sum() - 1) < slack
+    assert abs(tel.query(C.COUNT) / len(w) - 1) < slack
+    # segment query: keys from steps >= 6, routed via sketch_estimate
+    seg = lambda k: k >= 6000
+    exact = w[keys >= 6000].sum()
+    est = tel.query(C.SUM, segment_fn=seg)
+    assert abs(est / exact - 1) < 2 * slack
+
+    # merge_from: two collectors over disjoint streams == their union
+    t2 = StatsCollector(TelemetryConfig(k=48, capacity=512, seed=9))
+    t2.absorb(np.arange(50) + 500_000, np.ones(50, np.float32))
+    tel.merge_from(t2)
+    assert abs(tel.query(C.SUM) / (w.sum() + 50) - 1) < slack
+
+
+def test_absorb_is_jit_cached_and_donated():
+    """The fold reuses one compiled executable across same-shape chunks."""
+    spec = C.MultiSketchSpec(objectives=((C.SUM, 8), (C.COUNT, 8)), seed=1)
+    st = C.multisketch_empty(spec)
+    from repro.core.multi_sketch import _absorb_jit
+    misses0 = _absorb_jit._cache_size()
+    for i in range(4):
+        st = C.multisketch_absorb(st, np.arange(i * 64, (i + 1) * 64),
+                                  np.ones(64, np.float32), spec=spec)
+    assert _absorb_jit._cache_size() == misses0 + 1
+
+
+_SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import json
+    import numpy as np
+    import jax
+    import repro.core as C
+    from repro.launch.summary import sharded_multisketch
+
+    rng = np.random.default_rng(4)
+    n = 4096
+    keys = rng.permutation(np.arange(n)).astype(np.int32)
+    w = rng.lognormal(0, 1.5, n).astype(np.float32)
+    mesh = jax.make_mesh((4,), ("data",))
+    out = {}
+    for nf, objs in (
+            (1, ((C.SUM, 16),)),
+            (3, ((C.SUM, 16), (C.COUNT, 8), (C.thresh(2.0), 12))),
+            (8, ((C.SUM, 8), (C.COUNT, 8), (C.thresh(2.0), 8),
+                 (C.cap(1.5), 8), (C.moment(1.5), 8), (C.thresh(0.5), 8),
+                 (C.cap(4.0), 8), (C.moment(0.5), 8)))):
+        spec = C.MultiSketchSpec(objectives=objs, seed=13)
+        sk = sharded_multisketch(spec, mesh, keys, w)
+        ref = C.multi_bottomk_sample(keys, w, np.ones(n, bool), objs,
+                                     scheme="ppswor", seed=13)
+        m = np.asarray(sk.member)
+        got = dict(zip(np.asarray(sk.keys)[m].tolist(),
+                       np.asarray(sk.probs)[m].tolist()))
+        rm = np.asarray(ref.member)
+        want = dict(zip(keys[rm].tolist(),
+                        np.asarray(ref.prob)[rm].tolist()))
+        ok = (set(got) == set(want)
+              and all(abs(got[k] - want[k]) < 1e-5 for k in want)
+              and np.allclose(np.asarray(sk.taus), np.asarray(ref.taus),
+                              rtol=1e-6))
+        out[str(nf)] = bool(ok)
+    print("RESULT " + json.dumps(out))
+""")
+
+
+def test_sharded_build_matches_one_shot_multidevice():
+    """shard_map local-build -> all_gather -> one re-selection equals the
+    one-shot sample on a real 4-device (host) mesh, |F| in {1, 3, 8}."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT],
+                       capture_output=True, text=True, env=env, timeout=900,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))))
+    assert r.returncode == 0, r.stderr[-3000:]
+    line = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    assert out == {"1": True, "3": True, "8": True}
