@@ -142,7 +142,8 @@ def bench_sampling_throughput():
     us_prod = _timeit(lambda: C.universal_monotone_sample(
         keys, w, act, k, seed=0).member)
     _record("throughput_universal_sortscan", us_prod,
-            f"keys_per_s={n/us_prod*1e6:.3g}")
+            f"keys_per_s={n/us_prod*1e6:.3g};seed_recorded=3.18e5;"
+            f"speedup_vs_seed={n/us_prod*1e6/3.18e5:.2f}x")
     objs = ((0, 0.0), (3, 2.0), (1, 0.0))
     us_k = _timeit(lambda: K.ops.multi_objective_bottomk_kernel(
         jnp.asarray(keys), jnp.asarray(w), jnp.asarray(act), objs, k)[0])
@@ -151,7 +152,14 @@ def bench_sampling_throughput():
 
 
 def bench_merge_throughput():
-    """Composability cost: sketch merge (paper §5.2) at fixed capacity."""
+    """Composability cost: sketch merge (paper §5.2) at fixed capacity.
+
+    Satellite fix: merge_sketches is now jit-cached per (k, capacity, seed)
+    with an opt-in both-inputs-donated variant; the un-jitted op-by-op
+    dispatch path (the seed's behavior, 131.8 ms/call recorded pre-fix) is
+    timed alongside as the before/after record.
+    """
+    from repro.core.merge import _rebuild
     n, k = 16_384, 32
     rng = np.random.default_rng(4)
     keys = np.arange(n, dtype=np.int32)
@@ -160,8 +168,95 @@ def bench_merge_throughput():
     cap_sz = C.sketch_capacity(n, k)
     a = C.build_sketch(keys[:n // 2], w[:n // 2], act[:n // 2], k, cap_sz, 0)
     b = C.build_sketch(keys[n // 2:], w[n // 2:], act[n // 2:], k, cap_sz, 0)
+
+    def merge_nojit():
+        return _rebuild(jnp.concatenate([a.keys, b.keys]),
+                        jnp.concatenate([a.weights, b.weights]),
+                        jnp.concatenate([a.valid, b.valid]),
+                        k, cap_sz, 0).member
+
+    us_nojit = _timeit(merge_nojit)
     us = _timeit(lambda: C.merge_sketches(a, b).member)
-    _record("merge_sketches", us, f"capacity={cap_sz}")
+    _record("merge_sketches", us,
+            f"capacity={cap_sz};nojit_us={us_nojit:.0f};"
+            f"seed_recorded_us=131789;jit_speedup={us_nojit/us:.1f}x")
+    # donated fold: state <- merge(state, fresh) with both slabs consumed
+    fresh = lambda s: s._replace(
+        keys=jnp.array(s.keys), weights=jnp.array(s.weights),
+        probs=jnp.array(s.probs), member=jnp.array(s.member),
+        valid=jnp.array(s.valid))
+    pool = [(fresh(a), fresh(b)) for _ in range(7)]
+    it = iter(pool)
+    import warnings
+    with warnings.catch_warnings():
+        # int32 keys can't alias across the concat; donation of the float
+        # slabs still holds — silence the partial-donation notice
+        warnings.filterwarnings("ignore", message=".*donated buffers.*")
+        us_don = _timeit(
+            lambda: C.merge_sketches(*next(it), donate=True).member, n=5)
+    _record("merge_sketches_donated", us_don, f"capacity={cap_sz}")
+
+
+def bench_universal_scan(smoke: bool = False):
+    """Satellite: the blocked buffer scan (rank pass + inserted-subsequence
+    replay) vs the sequential one-element-per-step reference scan. Runs at
+    full n even in --smoke: the blocked win is the large-n regime (the
+    inserted-subsequence bound grows ~k ln n while n grows linearly)."""
+    from repro.core.universal import _buffer_scan, _buffer_scan_ref
+    n, k1 = 65_536, 65
+    rng = np.random.default_rng(8)
+    v = jnp.asarray(rng.exponential(1.0, n).astype(np.float32))
+    idx = jnp.arange(n, dtype=jnp.int32)
+    ref = jax.jit(partial(_buffer_scan_ref, k_plus_1=k1))
+    us_blk = _timeit(lambda: _buffer_scan(v, idx, k1)[1])
+    us_ref = _timeit(lambda: ref(v, idx)[1])
+    _record("universal_scan_blocked", us_blk,
+            f"keys_per_s={n/us_blk*1e6:.3g};"
+            f"speedup_vs_ref={us_ref/us_blk:.2f}x")
+    _record("universal_scan_ref", us_ref, f"keys_per_s={n/us_ref*1e6:.3g}")
+
+
+def bench_query_engine(smoke: bool = False):
+    """Tentpole claim: batched segment queries (ONE fused launch for
+    B predicates x |F| objectives, kernels.segquery) vs the one-query-at-
+    a-time loop (one launch per (f, H) pair — the pre-PR serving path),
+    against a resident merged slab. queries/s, B x |F| grid."""
+    from repro.launch.query import SegmentQueryEngine
+    pool = ((C.SUM, 64), (C.COUNT, 64), (C.thresh(2.0), 64),
+            (C.cap(1.5), 64), (C.moment(1.5), 64), (C.thresh(0.5), 64),
+            (C.cap(4.0), 64), (C.moment(0.5), 64))
+    n = 16_384 if smoke else 65_536
+    rng = np.random.default_rng(9)
+    keys = np.arange(n, dtype=np.int32)
+    w = rng.lognormal(0, 1.5, n).astype(np.float32)
+    grid = (((16, 3), (128, 8)) if smoke
+            else ((1, 1), (1, 3), (1, 8), (16, 1), (16, 3), (16, 8),
+                  (128, 1), (128, 3), (128, 8)))
+    span = n // 128
+
+    for b, nf in grid:
+        spec = C.MultiSketchSpec(objectives=pool[:nf], seed=0)
+        eng = SegmentQueryEngine(spec, shards=4)
+        for i in range(4):
+            eng.absorb(keys[i::4], w[i::4], shard=i)
+        preds = [C.key_range(j * span, (j + 1) * span - 1) for j in range(b)]
+        fs = tuple(f for f, _ in spec.objectives)
+        sk = eng.merged
+
+        us_batch = _timeit(lambda: eng.query_many(fs, preds), n=3)
+        qps_batch = b * nf / us_batch * 1e6
+
+        def loop_all():
+            out = None
+            for f in fs:
+                for p in preds:
+                    out = C.multisketch_estimate_batch(sk, (f,), (p,))
+            return out
+        us_loop = _timeit(loop_all, n=3)
+        qps_loop = b * nf / us_loop * 1e6
+        _record(f"bench_query_engine_B{b}_F{nf}", us_batch,
+                f"qps={qps_batch:.3g};loop_qps={qps_loop:.3g};"
+                f"batched_speedup={us_loop/us_batch:.1f}x")
 
 
 def bench_absorb_throughput(smoke: bool = False):
@@ -299,6 +394,8 @@ def main(argv=None) -> None:
         bench_sampling_throughput()
     bench_merge_throughput()
     bench_absorb_throughput(smoke=args.smoke)
+    bench_universal_scan(smoke=args.smoke)
+    bench_query_engine(smoke=args.smoke)
     bench_gradient_compression()
     if not args.smoke:
         bench_multiobj_scaling()

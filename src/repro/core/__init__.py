@@ -12,15 +12,19 @@ from .universal import (UniversalSample, expected_size_bound,
                         universal_monotone_ref, universal_monotone_sample)
 from .capping import (CappingSample, capping_size_bound, universal_capping_ref,
                       universal_capping_sample)
-from .estimators import (cv_bound, estimate, estimate_segments, exact,
-                         exact_segments)
+from .estimators import (cv_bound, estimate, estimate_many,
+                         estimate_segments, exact, exact_segments)
 from .merge import (Sketch, build_sketch, merge_many, merge_sketches,
                     sketch_capacity, sketch_estimate)
 from .multi_sketch import (MultiSketch, MultiSketchSpec, multisketch_absorb,
                            multisketch_absorb_inline, multisketch_build,
                            multisketch_empty, multisketch_estimate,
-                           multisketch_merge, multisketch_merge_stacked,
-                           multisketch_overflow, multisketch_select)
+                           multisketch_estimate_batch, multisketch_merge,
+                           multisketch_merge_stacked, multisketch_overflow,
+                           multisketch_query_many, multisketch_select)
+from .predicates import (EVERYTHING, SegmentPredicate, encode_predicates,
+                         hash_fraction, key_mask, key_range,
+                         predicate_matrix)
 from .metric_domains import (MetricSample, estimate_ball_density,
                              estimate_centrality, universal_metric_sample)
 
@@ -34,14 +38,18 @@ __all__ = [
     "expected_size_bound",
     "CappingSample", "universal_capping_ref", "universal_capping_sample",
     "capping_size_bound",
-    "estimate", "estimate_segments", "exact", "exact_segments", "cv_bound",
+    "estimate", "estimate_many", "estimate_segments", "exact",
+    "exact_segments", "cv_bound",
     "Sketch", "build_sketch", "merge_sketches", "merge_many",
     "sketch_capacity", "sketch_estimate",
     "MultiSketch", "MultiSketchSpec", "multisketch_absorb",
     "multisketch_absorb_inline",
     "multisketch_build", "multisketch_empty", "multisketch_estimate",
+    "multisketch_estimate_batch", "multisketch_query_many",
     "multisketch_merge", "multisketch_merge_stacked", "multisketch_overflow",
     "multisketch_select",
+    "SegmentPredicate", "EVERYTHING", "key_range", "key_mask",
+    "hash_fraction", "encode_predicates", "predicate_matrix",
     "MetricSample", "universal_metric_sample", "estimate_centrality",
     "estimate_ball_density",
 ]

@@ -28,6 +28,20 @@ def estimate_segments(f: StatFn, weights, probs, member, segment_ids,
                                num_segments=num_segments)
 
 
+def estimate_many(fs, weights, probs, member, segments):
+    """Q^(f_i, H_b) for |F| objectives x B (possibly overlapping) segments.
+
+    fs: sequence of StatFn; segments: bool [B, n] (one mask row per segment,
+    unlike ``estimate_segments``'s disjoint partition). Returns [|F|, B].
+    One |F| x n contribution matrix and one matmul against the segment mask
+    — the XLA mirror of the single-launch segquery kernel.
+    """
+    probs = jnp.asarray(probs, jnp.float32)
+    ht = jnp.where(member, 1.0 / jnp.maximum(probs, 1e-30), 0.0)
+    contrib = jnp.stack([f(weights) for f in fs]) * ht          # [F, n]
+    return contrib @ jnp.asarray(segments).astype(jnp.float32).T
+
+
 def exact(f: StatFn, weights, active, segment=None):
     """Ground-truth Q(f, H) for validation."""
     sel = active if segment is None else (active & segment)

@@ -34,9 +34,30 @@ valid slabs [capacity] plus per-objective seeds [|F|, capacity] and taus
 
 ``sketch_estimate`` below is the single HT-estimate implementation shared
 by both formats (they agree on the member/weights/probs/keys fields).
+
+QUERY-ENGINE CONTRACT (launch.query.SegmentQueryEngine + kernels.segquery):
+serving reads a sketch through batched segment queries, and the merge
+invariants above are exactly what make that correct:
+
+  * a query batch is B predicate rows x |F| objectives evaluated against
+    ONE merged slab in ONE kernel launch; each estimate is the same HT sum
+    as ``sketch_estimate`` (sum over member slots of f(w)/p restricted to
+    the segment), so per-objective CV guarantees (Thm 3.1) apply per row;
+  * predicates use the int32 wire format of core.predicates — one row
+    [lo, hi, mask, want, salt, flags] meaning
+    ``lo <= v <= hi and (v & mask) == want`` with v = key, or
+    v = hash31(key, salt) when flags bit 0 (ON_HASH) is set. hash31 is the
+    top 31 bits of the shared key hash, so ON_HASH rows select the SAME
+    uniform key fraction on every shard/host (coordination);
+  * the engine keeps per-shard slabs resident and materializes the merged
+    slab lazily, memoized per absorb epoch. Because merging is EXACT (the
+    invariants above), a lazily-merged answer is bit-identical to querying
+    the eager ``launch.summary.sharded_multisketch`` result, for any
+    absorb/merge interleaving.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -96,14 +117,39 @@ def _compact(keys, weights, s: UniversalSample, k: int, capacity: int,
         k=k, seed=seed)
 
 
-def merge_sketches(a: Sketch, b: Sketch) -> Sketch:
+def _merge_core(ak, aw, av, bk, bw, bv, *, k, capacity, seed):
+    s = _rebuild(jnp.concatenate([ak, bk]), jnp.concatenate([aw, bw]),
+                 jnp.concatenate([av, bv]), k, capacity, seed)
+    return s.keys, s.weights, s.probs, s.member, s.valid
+
+
+_merge_jit = partial(jax.jit, static_argnames=("k", "capacity", "seed"))(
+    _merge_core)
+# the donated variant reuses both input slabs' buffers for the result —
+# for fold-style callers (state <- merge(state, new)) that never touch the
+# inputs again; re-using a donated slab is an error by design
+_merge_jit_donated = partial(jax.jit,
+                             static_argnames=("k", "capacity", "seed"),
+                             donate_argnums=(0, 1, 2, 3, 4, 5))(_merge_core)
+
+
+def merge_sketches(a: Sketch, b: Sketch, donate: bool = False) -> Sketch:
     """Merge two sketches (same k/seed): concat, dedup (keep max weight),
-    re-select. Exact per paper §5.2."""
+    re-select. Exact per paper §5.2.
+
+    jit-cached per (k, capacity, seed, shapes) — repeated merges under one
+    spec reuse a single compiled executable. ``donate=True`` additionally
+    donates BOTH input slabs' device buffers to the output (zero
+    steady-state allocation for streaming folds); the inputs must not be
+    used afterwards.
+    """
     assert a.k == b.k and a.seed == b.seed, "sketches must share k and hash seed"
-    keys = jnp.concatenate([a.keys, b.keys])
-    weights = jnp.concatenate([a.weights, b.weights])
-    valid = jnp.concatenate([a.valid, b.valid])
-    return _rebuild(keys, weights, valid, a.k, a.keys.shape[0], a.seed)
+    fn = _merge_jit_donated if donate else _merge_jit
+    keys, weights, probs, member, valid = fn(
+        a.keys, a.weights, a.valid, b.keys, b.weights, b.valid,
+        k=a.k, capacity=a.keys.shape[0], seed=a.seed)
+    return Sketch(keys=keys, weights=weights, probs=probs, member=member,
+                  valid=valid, k=a.k, seed=a.seed)
 
 
 def merge_many(sketches_keys, sketches_weights, sketches_valid, k: int,

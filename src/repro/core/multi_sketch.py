@@ -364,6 +364,25 @@ def multisketch_merge_stacked(spec: MultiSketchSpec, stacked: MultiSketch,
                     use_kernels)
 
 
+def pad_chunk(keys, weights, active=None, chunk: int = 256):
+    """Pad a host chunk of keyed observations to the ``chunk`` quantum
+    (keys -1, weights 0, inactive) so the absorb fold's jit traces stay
+    bounded. ``active`` defaults to weights > 0. Shared by every host
+    collector fronting :func:`multisketch_absorb`."""
+    import numpy as np
+    keys = np.asarray(keys, np.int32).reshape(-1)
+    weights = np.asarray(weights, np.float32).reshape(-1)
+    active = (weights > 0 if active is None
+              else np.asarray(active, bool).reshape(-1))
+    n = keys.shape[0]
+    npad = max(chunk, -(-n // chunk) * chunk)
+    if npad > n:
+        keys = np.pad(keys, (0, npad - n), constant_values=-1)
+        weights = np.pad(weights, (0, npad - n))
+        active = np.pad(active, (0, npad - n))
+    return keys, weights, active
+
+
 def multisketch_overflow(sk: MultiSketch) -> jnp.ndarray:
     """True iff the slab is full — i.e. compaction MAY have truncated
     S ∪ Z and the exact-merge guarantee is voided. Never True at the
@@ -377,3 +396,55 @@ def multisketch_estimate(sk: MultiSketch, f: StatFn,
     p^(F) weighting). ``segment_fn``: vectorized key predicate for H."""
     from .merge import sketch_estimate
     return sketch_estimate(sk, f, segment_fn)
+
+
+@partial(jax.jit, static_argnames=("fs", "use_kernels"))
+def _estimate_batch_jit(keys, weights, probs, member, table, *, fs,
+                        use_kernels):
+    if use_kernels:
+        from repro.kernels.segquery import segment_query_slab
+        enc = tuple((_KERNEL_KIND[f.kind], float(f.param)) for f in fs)
+        return segment_query_slab(keys, weights, probs, member, table, enc)
+    from .estimators import estimate_many
+    from .predicates import predicate_matrix
+    return estimate_many(fs, weights, probs, member,
+                         predicate_matrix(keys, table))
+
+
+def multisketch_query_many(sk: MultiSketch, fs, predicates,
+                           b_quantum: int = 16,
+                           use_kernels: Optional[bool] = None):
+    """Host-facing batched query: encode predicates, pad B up to a
+    ``b_quantum`` bucket (with never-matching rows, so same-bucket batches
+    share one compiled executable), run the fused estimate, slice back.
+    Returns float numpy [|F|, B]."""
+    import numpy as np
+
+    from .predicates import encode_predicates, pad_table
+    table = encode_predicates(predicates)
+    b = table.shape[0]
+    bpad = max(b_quantum, -(-b // b_quantum) * b_quantum)
+    out = multisketch_estimate_batch(sk, tuple(fs), pad_table(table, bpad),
+                                     use_kernels=use_kernels)
+    return np.asarray(out)[:, :b]
+
+
+def multisketch_estimate_batch(sk: MultiSketch, fs, predicates,
+                               use_kernels: Optional[bool] = None
+                               ) -> jnp.ndarray:
+    """Batched HT estimates Q(f_i, H_b) -> [|F|, B] from ONE slab pass.
+
+    fs: sequence of StatFn; predicates: SegmentPredicate(s) or an encoded
+    int32 wire table [B, PRED_COLS] (core.predicates). The kernel path
+    (default when every f has a seeds-kernel encoding) is a single Pallas
+    launch for the whole B x |F| batch; combo objectives or
+    use_kernels=False take the bit-compatible XLA path (one contribution
+    matrix + one matmul).
+    """
+    from .predicates import encode_predicates
+    fs = tuple(fs)
+    table = jnp.asarray(encode_predicates(predicates), jnp.int32)
+    uk = True if use_kernels is None else use_kernels
+    uk = uk and all(f.kind in _KERNEL_KIND for f in fs)
+    return _estimate_batch_jit(sk.keys, sk.weights, sk.probs, sk.member,
+                               table, fs=fs, use_kernels=uk)

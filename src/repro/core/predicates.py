@@ -1,0 +1,151 @@
+"""Segment-predicate wire format for batched segment queries Q^(f, H).
+
+A segment H is any subset of the key space (paper §1: "segment
+f-statistics"). The query engine evaluates B predicates x |F| objectives
+over a MultiSketch slab in one kernel launch (kernels.segquery), so the
+predicate must be a fixed-width DEVICE value, not a Python callable. The
+wire format is one int32 row of ``PRED_COLS`` columns per predicate:
+
+  col 0  lo     value-range lower bound (inclusive)
+  col 1  hi     value-range upper bound (inclusive)
+  col 2  mask   bitmask test: (v & mask) == want   (mask 0 -> always true)
+  col 3  want
+  col 4  salt   hash seed for ON_HASH predicates
+  col 5  flags  bit 0 (ON_HASH): test v = hash31(key, salt) instead of the
+                key itself
+
+with v = key for plain predicates, or v = hash31(key, salt) = the top 31
+bits of ``hash_u32(key, salt)`` (a uniform value in [0, 2^31)) when
+ON_HASH is set. All three tests AND together, plus key >= 0 (slot
+occupied). The same row therefore expresses:
+
+  * key ranges        (lo, hi)           — e.g. "keys from steps >= 6"
+  * key bitmasks      (mask, want)       — e.g. "domain id in low bits"
+  * hashed fractions  ON_HASH + [0, q*2^31) — a coordinated uniform
+    q-fraction of the key space, reproducible on every shard (same
+    hash), as in the distance-oracle pattern of arXiv:1203.4903.
+
+``predicate_matrix`` is the vectorized oracle shared by the XLA estimate
+path and the kernel tests; the Pallas kernel (kernels.segquery) computes
+the identical function in-VMEM.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from .hashing import hash_u32
+
+PRED_COLS = 6
+FLAG_ON_HASH = 1
+INT32_MIN = -(2 ** 31)
+INT32_MAX = 2 ** 31 - 1
+_HASH31_SPAN = 2 ** 31  # hash31 values are uniform in [0, 2^31)
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentPredicate:
+    """One segment predicate H (hashable -> usable as a jit-static arg).
+
+    Matches keys x with ``lo <= v <= hi`` and ``(v & mask) == want`` where
+    v is the key itself, or hash31(key, salt) when ``on_hash``.
+    """
+
+    lo: int = INT32_MIN
+    hi: int = INT32_MAX
+    mask: int = 0
+    want: int = 0
+    salt: int = 0
+    on_hash: bool = False
+
+    def row(self) -> np.ndarray:
+        """The predicate's int32 wire row [PRED_COLS]."""
+        return np.array([self.lo, self.hi, self.mask, self.want, self.salt,
+                         FLAG_ON_HASH if self.on_hash else 0], np.int32)
+
+    def __call__(self, keys) -> jnp.ndarray:
+        """Vectorized key predicate (drop-in ``segment_fn``)."""
+        return predicate_matrix(keys, self.row()[None, :])[0]
+
+
+EVERYTHING = SegmentPredicate()
+
+
+def key_range(lo: int, hi: int) -> SegmentPredicate:
+    """Keys in [lo, hi] inclusive."""
+    return SegmentPredicate(lo=int(lo), hi=int(hi))
+
+
+def key_mask(mask: int, want: int) -> SegmentPredicate:
+    """Keys with (key & mask) == want (e.g. a domain id packed in key bits)."""
+    return SegmentPredicate(mask=int(mask), want=int(want))
+
+
+def hash_fraction(q: float, salt: int = 0) -> SegmentPredicate:
+    """A coordinated uniform q-fraction of the key space: keys whose 31-bit
+    hash (keyed by ``salt``) falls below q * 2^31. The same (q, salt) selects
+    the same keys on every shard/host — shared hashing, paper §1."""
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"fraction q={q} outside [0, 1]")
+    return SegmentPredicate(lo=0, hi=int(q * _HASH31_SPAN) - 1, salt=int(salt),
+                            on_hash=True)
+
+
+Predicates = Union[SegmentPredicate, Sequence[SegmentPredicate], np.ndarray,
+                   jnp.ndarray]
+
+
+def encode_predicates(preds: Predicates) -> np.ndarray:
+    """-> int32 wire table [B, PRED_COLS]. Accepts a single predicate, a
+    sequence of predicates, or an already-encoded table (passed through)."""
+    if isinstance(preds, SegmentPredicate):
+        return preds.row()[None, :]
+    if isinstance(preds, (np.ndarray, jnp.ndarray)):
+        t = np.asarray(preds, np.int32)
+        if t.ndim != 2 or t.shape[1] != PRED_COLS:
+            raise ValueError(
+                f"predicate table must be [B, {PRED_COLS}], got {t.shape}")
+        return t
+    rows = [p.row() for p in preds]
+    if not rows:
+        raise ValueError("empty predicate batch")
+    return np.stack(rows)
+
+
+def never_row() -> np.ndarray:
+    """A row matching nothing (lo > hi) — the padding element for batch
+    quantization; padded query slots estimate exactly 0."""
+    return np.array([1, 0, 0, 0, 0, 0], np.int32)
+
+
+def pad_table(table: np.ndarray, b_pad: int) -> np.ndarray:
+    """Pad a wire table to ``b_pad`` rows with never-matching predicates."""
+    b = table.shape[0]
+    if b >= b_pad:
+        return table
+    return np.concatenate([table, np.tile(never_row(), (b_pad - b, 1))])
+
+
+def hash31(keys, salt) -> jnp.ndarray:
+    """Top 31 bits of hash_u32(key, salt) as int32 in [0, 2^31) — the value
+    ON_HASH predicates test. Broadcasts keys against salt."""
+    return (hash_u32(keys, salt) >> jnp.uint32(1)).astype(jnp.int32)
+
+
+def predicate_matrix(keys, table) -> jnp.ndarray:
+    """Evaluate a wire table against keys: [B, PRED_COLS] x [n] -> bool [B, n].
+
+    The reference implementation of the wire semantics; the segquery kernel
+    computes the same function in-VMEM (bit-identical selection).
+    """
+    k = jnp.asarray(keys, jnp.int32)[None, :]                 # [1, n]
+    t = jnp.asarray(table, jnp.int32)
+    lo, hi = t[:, 0:1], t[:, 1:2]                             # [B, 1]
+    mask, want = t[:, 2:3], t[:, 3:4]
+    salt, flags = t[:, 4:5], t[:, 5:6]
+    hv = hash31(k, salt)                                      # [B, n]
+    v = jnp.where((flags & FLAG_ON_HASH) != 0, hv, k)
+    return ((v >= lo) & (v <= hi) & ((v & mask) == want) & (k >= 0))

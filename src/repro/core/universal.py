@@ -16,12 +16,16 @@ Key facts implemented here:
 Two implementations:
   * ``universal_monotone_ref``  — O(n^2) pairwise oracle (tests, small n).
   * ``universal_monotone_sample`` — production path: one XLA sort by (-w, u)
-    + a ``lax.scan`` carrying the (k+1) smallest u's seen so far. This is
-    paper Algorithm 1 with the max-heap replaced by a fixed-shape sorted
-    buffer (TPU adaptation — see DESIGN.md §3).
+    + a BLOCKED buffer scan carrying the (k+1) smallest u's seen so far
+    (``_buffer_scan``: _SCAN_CHUNK elements per sequential step, each step
+    pure cumsum/matmul-shaped vector work; bit-identical to the one-element-
+    per-step ``_buffer_scan_ref``). This is paper Algorithm 1 with the
+    max-heap replaced by a fixed-shape sorted buffer (TPU adaptation — see
+    DESIGN.md §3).
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -80,17 +84,11 @@ def universal_monotone_ref(weights, u, active, k: int) -> UniversalSample:
 # Production path: sort + (k+1)-buffer scan  (Algorithm 1, TPU-adapted)
 # ---------------------------------------------------------------------------
 
-def _buffer_scan(values, indices, k_plus_1: int):
-    """Scan ``values`` (processing order) keeping the k_plus_1 smallest so far.
-
-    Per step emits:
-      rank   — #{processed before this step with value < v}, exact while
-               <= k_plus_1 - 1; == k_plus_1 means "saturated" (>= that many).
-      tail_v — buffer's largest kept value AFTER inserting v
-               (= the k_plus_1-th smallest processed so far, inf if fewer).
-      tail_i — index of the key realizing tail_v (-1 if none).
-    """
-    n = values.shape[0]
+def _buffer_scan_ref(values, indices, k_plus_1: int):
+    """Reference (sequential) buffer scan — one lax.scan step per element,
+    O(n) sequential steps of O(k) vector work. Kept as the bit-exactness
+    oracle for the blocked ``_buffer_scan``; see that docstring for the
+    emitted (rank, tail_v, tail_i) contract."""
     slots = jnp.arange(k_plus_1)
 
     def step(carry, xs):
@@ -115,6 +113,102 @@ def _buffer_scan(values, indices, k_plus_1: int):
     return rank, tail_v, tail_i
 
 
+_SCAN_CHUNK = 128  # elements folded per blocked rank-scan step
+
+
+@partial(jax.jit, static_argnames=("k_plus_1",))
+def _buffer_scan(values, indices, k_plus_1: int):
+    """Scan ``values`` (processing order) keeping the k_plus_1 smallest so far.
+
+    Per step emits:
+      rank   — #{processed before this step with value < v}, exact while
+               <= k_plus_1 - 1; == k_plus_1 means "saturated" (>= that many).
+      tail_v — buffer's largest kept value AFTER inserting v
+               (= the k_plus_1-th smallest processed so far, inf if fewer).
+      tail_i — index of the key realizing tail_v (-1 if none).
+
+    BLOCKED implementation, bit-identical to ``_buffer_scan_ref``, built on
+    two facts about the sequential buffer:
+
+      * the emitted rank equals min(#{earlier with value < v}, k_plus_1) —
+        a capped prefix-smaller-count, independent of buffer dynamics;
+      * an element whose rank saturates is NEVER inserted, so the tail
+        sequence is a function of the INSERTED subsequence only (expected
+        size ~ k ln n for hashed/random processing order, paper Thm 5.1's
+        harmonic argument), and a dropped position's tail is that of the
+        most recent inserted position (forward fill).
+
+    Phase 1 computes every rank with a chunked scan (n / _SCAN_CHUNK
+    sequential steps: carry = the k_plus_1 smallest values so far, one
+    searchsorted + one [C, C] masked pairwise count per chunk). Phase 2
+    compacts the inserted elements with a cumsum scatter and replays only
+    them through ``_buffer_scan_ref`` (a static bound ~4x the expected
+    inserted count; in the unlikely overflow — e.g. an adversarial
+    near-descending order — a ``lax.cond`` falls back to the full
+    sequential replay, preserving exactness).
+    """
+    n = values.shape[0]
+    k1 = k_plus_1
+    if n == 0:
+        return (jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.float32),
+                jnp.zeros((0,), jnp.int32))
+    v = values.astype(jnp.float32)
+    ix = indices.astype(jnp.int32)
+    bound = _insert_bound(n, k1)
+    if bound >= n:  # replay wouldn't compress anything — scan directly
+        return _buffer_scan_ref(v, ix, k1)
+
+    # ---- phase 1: ranks --------------------------------------------------
+    c = min(_SCAN_CHUNK, n)
+    npad = -(-n // c) * c
+    vp = (jnp.pad(v, (0, npad - n), constant_values=jnp.inf)
+          if npad > n else v)  # inert tail pad; outputs sliced back
+    s_idx = jnp.arange(c)
+    before = s_idx[:, None] < s_idx[None, :]
+
+    def rank_step(bv, cv):
+        # carry bv: the k1 smallest values so far (sorted multiset), so
+        # searchsorted == min(#{earlier chunks' values < cv}, k1)
+        cc = jnp.searchsorted(bv, cv).astype(jnp.int32)
+        within = jnp.sum((cv[:, None] < cv[None, :]) & before, axis=0,
+                         dtype=jnp.int32)
+        rank = jnp.minimum(cc + within, k1)
+        return jnp.sort(jnp.concatenate([bv, cv]))[:k1], rank
+
+    _, rank = jax.lax.scan(rank_step, jnp.full((k1,), _INF),
+                           vp.reshape(-1, c))
+    rank = rank.reshape(-1)[:n]
+
+    # ---- phase 2: tails from the inserted subsequence --------------------
+    ins = rank < k1
+    fill = jnp.cumsum(ins) - 1        # per position: last inserted slot
+    slot = jnp.where(ins, fill, bound)
+    num = fill[-1] + 1
+    comp_v = jnp.full((bound,), _INF).at[slot].set(v, mode="drop")
+    comp_i = jnp.full((bound,), -1, jnp.int32).at[slot].set(ix, mode="drop")
+
+    def replay_compressed(_):
+        _, tv, ti = _buffer_scan_ref(comp_v, comp_i, k1)
+        return (jnp.where(fill >= 0, tv[jnp.maximum(fill, 0)], _INF),
+                jnp.where(fill >= 0, ti[jnp.maximum(fill, 0)], -1))
+
+    def replay_full(_):
+        _, tv, ti = _buffer_scan_ref(v, ix, k1)
+        return tv, ti
+
+    tail_v, tail_i = jax.lax.cond(num <= bound, replay_compressed,
+                                  replay_full, None)
+    return rank, tail_v, tail_i
+
+
+def _insert_bound(n: int, k1: int) -> int:
+    """Static capacity for the inserted subsequence: ~4x the expected
+    count k1 * (1 + ln(n / k1)) (harmonic bound), rounded up."""
+    import math
+    exp = k1 * (2.0 + math.log(max(n, 2) / max(k1, 1) + 1.0))
+    return min(n, max(256, -(-4 * int(exp) // 128) * 128))
+
+
 def _group_last(sorted_w):
     """For each sorted position, the position of the LAST element with the
     same weight (weight-group end)."""
@@ -127,9 +221,14 @@ def _group_last(sorted_w):
     return jax.lax.cummin(jnp.where(is_last, pos, n), axis=0, reverse=True)
 
 
+@partial(jax.jit, static_argnames=("k",))
 def universal_monotone_sample(keys, weights, active, k: int,
                               seed=0, u=None) -> UniversalSample:
-    """S^(M,k) over a fixed-shape batch. O(n log n) sort + O(n k) scan."""
+    """S^(M,k) over a fixed-shape batch: O(n log n) sort + blocked scan.
+
+    jit-compiled per (shape, k): host callers get one dispatch; jitted
+    callers (merge/sketch rebuilds) inline it into the enclosing trace.
+    """
     w = jnp.asarray(weights, jnp.float32)
     act = jnp.asarray(active, bool) & (w > 0)
     if u is None:

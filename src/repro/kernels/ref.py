@@ -50,6 +50,18 @@ def batched_bottomk_select_ref(seeds, k: int):
     return vals[:, :k], iv.astype(jnp.int32), tau
 
 
+def segment_query_ref(keys, weights, probs, member, table, objectives):
+    """Oracle for kernels.segquery.segment_query_slab: [|F|, B] estimates
+    via the shared predicate oracle + the batched HT estimator."""
+    from repro.core.estimators import estimate_many
+    from repro.core.predicates import predicate_matrix
+    fs = [StatFn(_KIND_TO_STATFN[kind][0], float(param))
+          for kind, param in objectives]
+    sel = predicate_matrix(keys, table)
+    return estimate_many(fs, jnp.asarray(weights, jnp.float32), probs,
+                         member, sel)
+
+
 def rank_counts_ref(weights, s_h, s_l, active):
     """Oracle for kernels.rankcount.rank_counts. O(n^2)."""
     w = jnp.asarray(weights, jnp.float32)

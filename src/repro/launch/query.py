@@ -1,0 +1,159 @@
+"""Device-resident segment-query engine (the serving tier).
+
+The sharded build (launch.summary) re-selects the merged sample EAGERLY,
+replicated on every device, on every build — wasted work when the summary
+is rebuilt often and queried rarely, and the wrong shape for serving where
+per-shard sketches trickle in (telemetry collectors, checkpointed slabs,
+cross-job merges). This engine is the lazy counterpart, the "precompute a
+compact sampled structure once, answer many queries cheaply" pattern of
+distance-oracle sampling (arXiv:1203.4903):
+
+  * per-shard ``MultiSketch`` slabs stay RESIDENT on device — absorbing a
+    chunk touches only its shard's slab (the jit'd donated streaming fold);
+  * the merged slab is materialized ON DEMAND (one stacked re-selection,
+    jit-cached per spec) and memoized until the next absorb/update bumps
+    the epoch — repeated queries between updates pay ZERO merge work, and
+    exactness is the threshold-closure merge invariant (core.merge
+    docstring);
+  * ``query_many`` answers a batch of B segment predicates x |F|
+    objectives in ONE fused launch over the merged slab
+    (kernels.segquery), with B bucketed to a quantum so jit traces stay
+    bounded. Single ``query`` calls route through the same batched path —
+    a repeated query is O(1) launches, never a retrace.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.funcs import StatFn
+from repro.core.multi_sketch import (MultiSketch, MultiSketchSpec,
+                                     multisketch_absorb, multisketch_empty,
+                                     multisketch_merge_stacked,
+                                     multisketch_query_many, pad_chunk)
+from repro.core.predicates import EVERYTHING, SegmentPredicate
+
+
+@partial(jax.jit, static_argnames=("spec", "use_kernels"))
+def _merge_stacked_jit(stacked, *, spec, use_kernels):
+    """jit-cached merge-on-demand: one re-selection (batched top_k reuse)
+    per epoch, shared across every query until the next absorb."""
+    return multisketch_merge_stacked(spec, stacked, use_kernels)
+
+
+class SegmentQueryEngine:
+    """Resident per-shard MultiSketches + lazy merge + batched queries.
+
+    One engine serves every (f, H) query the spec's objectives cover; the
+    per-objective CV guarantee (paper Thm 3.1) is the serving SLO.
+    """
+
+    def __init__(self, spec: MultiSketchSpec, shards: int = 1,
+                 b_quantum: int = 16, chunk: int = 256,
+                 use_kernels: Optional[bool] = None):
+        if shards < 1:
+            raise ValueError(f"need >= 1 shard, got {shards}")
+        self.spec = spec
+        self.b_quantum = int(b_quantum)
+        self.chunk = int(chunk)
+        self.use_kernels = use_kernels
+        self._shards = [multisketch_empty(spec) for _ in range(shards)]
+        self._epoch = 0            # bumped by every state mutation
+        self._merged: Optional[MultiSketch] = None
+        self._merged_epoch = -1    # epoch the cached merged slab reflects
+
+    # -- resident state ----------------------------------------------------
+    @property
+    def num_shards(self) -> int:
+        return len(self._shards)
+
+    @property
+    def epoch(self) -> int:
+        return self._epoch
+
+    def absorb(self, keys, weights, active=None, shard: int = 0):
+        """Fold a chunk into one shard's resident slab (donated device fold);
+        invalidates the merged-slab cache."""
+        # a handed-out ``merged`` slab may ALIAS this shard's live state
+        # (the single-shard fast path); re-point the shard at fresh buffers
+        # first, so the donated fold cannot invalidate the caller's copy
+        if self._merged is not None and self._merged is self._shards[shard]:
+            self._shards[shard] = jax.tree.map(jnp.copy,
+                                               self._shards[shard])
+        keys, weights, active = pad_chunk(keys, weights, active, self.chunk)
+        self._shards[shard] = multisketch_absorb(
+            self._shards[shard], keys, weights, active, spec=self.spec,
+            use_kernels=self.use_kernels)
+        self._epoch += 1
+
+    def set_shard(self, shard: int, sketch: MultiSketch):
+        """Install a prebuilt slab (a collector's state, a checkpointed
+        sketch, a slab wired from another job) as one shard's residency.
+        The slab is COPIED in: a later absorb on this shard donates the
+        resident buffers, and the caller's handle must stay valid."""
+        self._shards[shard] = jax.tree.map(jnp.copy, sketch)
+        self._epoch += 1
+
+    def load_stacked(self, stacked: MultiSketch):
+        """Adopt a stacked batch of per-shard slabs (leaves [m, ...], e.g.
+        from ``launch.summary.sharded_multisketch_shards``) as the resident
+        state — the merge stays lazy until the first query."""
+        m = stacked.keys.shape[0]
+        self._shards = [jax.tree.map(lambda x, i=i: x[i], stacked)
+                        for i in range(m)]
+        self._epoch += 1
+
+    @classmethod
+    def from_sharded(cls, spec: MultiSketchSpec, mesh, keys, weights,
+                     active=None, axis: str = "data", **kw
+                     ) -> "SegmentQueryEngine":
+        """Build per-shard slabs over mesh-sharded data (local selection
+        only — no replicated merge) and hold them resident."""
+        from repro.launch.summary import sharded_multisketch_shards
+        stacked = sharded_multisketch_shards(spec, mesh, keys, weights,
+                                             active, axis=axis)
+        eng = cls(spec, shards=stacked.keys.shape[0], **kw)
+        eng.load_stacked(stacked)
+        return eng
+
+    # -- lazy merge-on-demand ----------------------------------------------
+    @property
+    def merged(self) -> MultiSketch:
+        """The merged slab, materialized at most once per epoch."""
+        if self._merged_epoch != self._epoch:
+            if len(self._shards) == 1:
+                self._merged = self._shards[0]
+            else:
+                stacked = MultiSketch(*jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *self._shards))
+                self._merged = _merge_stacked_jit(
+                    stacked, spec=self.spec,
+                    use_kernels=(True if self.use_kernels is None
+                                 else self.use_kernels))
+            self._merged_epoch = self._epoch
+        return self._merged
+
+    # -- queries -----------------------------------------------------------
+    def query_many(self, fs: Optional[Sequence[StatFn]] = None,
+                   predicates=EVERYTHING) -> np.ndarray:
+        """Q(f_i, H_b) for every objective x predicate -> float [|F|, B].
+
+        ONE fused launch over the merged slab regardless of B and |F|
+        (kernels.segquery); B is padded to ``b_quantum`` with never-matching
+        predicates so same-bucket batches share one compiled executable.
+        """
+        fs = (tuple(f for f, _ in self.spec.objectives) if fs is None
+              else tuple(fs))
+        return multisketch_query_many(self.merged, fs, predicates,
+                                      b_quantum=self.b_quantum,
+                                      use_kernels=self.use_kernels)
+
+    def query(self, f: StatFn, predicate: SegmentPredicate = EVERYTHING
+              ) -> float:
+        """Single Q(f, H) — routed through the batched path (same compiled
+        executable as any 1-query batch of this objective)."""
+        return float(self.query_many((f,), predicate)[0, 0])

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config, get_smoke_config, list_archs
-from repro.core import SUM, COUNT, thresh
+from repro.core import EVERYTHING, SUM, COUNT, hash_fraction, thresh
 from repro.launch.mesh import make_host_mesh, mesh_context
 from repro.models import model as Mod
 from repro.telemetry.stats import StatsCollector, TelemetryConfig
@@ -79,13 +79,20 @@ def main(argv=None):
         # request telemetry: device-resident MultiSketch fold over request
         # sizes — a sharded server keeps this state resident and merges the
         # fixed-size slabs across replicas (core.multi_sketch invariants).
+        # All dashboard statistics come back from ONE fused segment-query
+        # launch (batched objectives x predicates, kernels.segquery).
         tel = StatsCollector(TelemetryConfig(
             objectives=((SUM, 64), (COUNT, 64), (thresh(16.0), 64))))
         tel.absorb(np.arange(args.batch),
                    np.full(args.batch, float(args.prompt_len + args.gen)))
-        print("[telemetry] est total tokens served:", tel.query(SUM))
-        print("[telemetry] est requests >= 16 tokens:",
-              tel.query(thresh(16.0)))
+        stats = tel.query_many(
+            (SUM, COUNT, thresh(16.0)),
+            (EVERYTHING, hash_fraction(0.5, salt=1)))
+        print("[telemetry] est total tokens served:", float(stats[0, 0]))
+        print("[telemetry] est requests:", float(stats[1, 0]))
+        print("[telemetry] est requests >= 16 tokens:", float(stats[2, 0]))
+        print("[telemetry] est tokens, 50% coordinated key sample:",
+              float(stats[0, 1]))
 
 
 if __name__ == "__main__":

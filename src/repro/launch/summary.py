@@ -13,8 +13,12 @@ a mesh axis is three steps, all device-side:
      one-shot build over the full data.
 
 Because step 3 runs replicated on every device, the merged sketch comes
-back un-sharded and immediately queryable; a serving tier can instead keep
-step 3 lazy and merge on demand.
+back un-sharded and immediately queryable. The serving tier
+(launch.query.SegmentQueryEngine) instead keeps step 3 LAZY:
+``sharded_multisketch_shards`` stops after step 1 and returns the stacked
+per-shard slabs, which the engine holds resident and merges on demand
+(memoized per absorb epoch) — the eager replicated re-selection here is
+for build-then-broadcast pipelines, the engine for query serving.
 """
 from __future__ import annotations
 
@@ -58,6 +62,32 @@ def sharded_multisketch(spec: MultiSketchSpec, mesh, keys, weights,
         local, mesh,
         in_specs=(P(axis), P(axis), P(axis)),
         out_specs=jax.tree.map(lambda _: P(), multisketch_shape(spec)))
+    return jax.jit(fn)(keys, weights, active)
+
+
+def sharded_multisketch_shards(spec: MultiSketchSpec, mesh, keys, weights,
+                               active=None, axis: str = "data"
+                               ) -> MultiSketch:
+    """Step 1 only: per-device local builds, returned as STACKED slabs
+    (leaves [m, ...], one row per device along ``axis``) with no gather and
+    no re-selection — the resident state of the lazy serving tier
+    (launch.query.SegmentQueryEngine.load_stacked). Exactness of any later
+    merge over these rows is the threshold-closure invariant; merging all
+    m rows reproduces ``sharded_multisketch`` bit-identically.
+    """
+    keys = jnp.asarray(keys, jnp.int32)
+    weights = jnp.asarray(weights, jnp.float32)
+    active = (jnp.ones(keys.shape, bool) if active is None
+              else jnp.asarray(active, bool))
+
+    def local(k, w, a):
+        sk = multisketch_build(spec, k, w, a, use_kernels=False)
+        return jax.tree.map(lambda x: x[None], sk)  # [1, ...] rows to stack
+
+    fn = shard_map_compat(
+        local, mesh,
+        in_specs=(P(axis), P(axis), P(axis)),
+        out_specs=jax.tree.map(lambda _: P(axis), multisketch_shape(spec)))
     return jax.jit(fn)(keys, weights, active)
 
 

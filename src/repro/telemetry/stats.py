@@ -13,20 +13,27 @@ from one resident sketch, long after the raw stream is gone.
 
 ``StatsCollector`` is the thin host wrapper: it buckets ragged batch sizes
 (to bound jit retraces), owns the device-resident state, and routes queries
-through ``core.merge.sketch_estimate``.
+through the batched segment-query path (``multisketch_estimate_batch`` —
+one fused launch for any number of objectives x predicates; repeated
+queries reuse one compiled executable per (spec, objectives, B-bucket)).
+Arbitrary-callable ``segment_fn`` queries keep the eager
+``sketch_estimate`` path (no per-callable compile cache).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import (COUNT, SUM, MultiSketch, MultiSketchSpec,
                         multisketch_absorb, multisketch_empty,
-                        multisketch_merge, sketch_estimate)
+                        multisketch_merge, multisketch_query_many,
+                        sketch_estimate)
+from repro.core.multi_sketch import pad_chunk
 from repro.core.funcs import StatFn
+from repro.core.predicates import EVERYTHING, SegmentPredicate
 
 
 @dataclasses.dataclass
@@ -64,15 +71,8 @@ class StatsCollector:
 
     # -- streaming fold ----------------------------------------------------
     def absorb(self, keys, weights):
-        keys = np.asarray(keys, np.int32).reshape(-1)
-        weights = np.asarray(weights, np.float32).reshape(-1)
-        active = weights > 0
-        n = keys.shape[0]
-        npad = max(self.cfg.chunk, -(-n // self.cfg.chunk) * self.cfg.chunk)
-        if npad > n:  # pad to the chunk quantum so jit traces stay bounded
-            keys = np.pad(keys, (0, npad - n), constant_values=-1)
-            weights = np.pad(weights, (0, npad - n))
-            active = np.pad(active, (0, npad - n))
+        keys, weights, active = pad_chunk(keys, weights,
+                                          chunk=self.cfg.chunk)
         self.state = multisketch_absorb(self.state, keys, weights, active,
                                         spec=self.spec)
 
@@ -82,8 +82,27 @@ class StatsCollector:
 
     # -- queries -----------------------------------------------------------
     def query(self, f: StatFn, segment_fn=None) -> float:
-        """Estimate Q(f, H); segment_fn: vectorized predicate over keys."""
+        """Estimate Q(f, H); segment_fn: a ``SegmentPredicate`` (preferred)
+        or any vectorized key callable.
+
+        Predicate (and whole-set) queries route through the batched
+        single-launch path and reuse one compiled executable per
+        (spec, f, B-bucket) — repeated queries are O(1) launches.
+        Callable segments keep the eager ``sketch_estimate`` path (no
+        per-callable compile cache); express hot segments as
+        ``SegmentPredicate`` rows to get the fused path.
+        """
+        if segment_fn is None or isinstance(segment_fn, SegmentPredicate):
+            pred = EVERYTHING if segment_fn is None else segment_fn
+            return float(self.query_many((f,), (pred,))[0, 0])
         return float(sketch_estimate(self.state, f, segment_fn))
+
+    def query_many(self, fs: Sequence[StatFn],
+                   predicates=(EVERYTHING,)) -> np.ndarray:
+        """Q(f_i, H_b) for a whole query batch -> float [|F|, B]: ONE fused
+        launch over the resident slab (kernels.segquery), B bucketed to
+        bound retraces."""
+        return multisketch_query_many(self.state, fs, predicates)
 
     def size(self) -> int:
         return int(jnp.sum(self.state.member))
