@@ -259,6 +259,83 @@ def bench_query_engine(smoke: bool = False):
                 f"batched_speedup={us_loop/us_batch:.1f}x")
 
 
+def bench_cluster_engine(smoke: bool = False):
+    """PR 4 tentpole claim: batched service-cost scoring (ONE fused launch
+    for Q candidate center sets x the resident sample slab,
+    kernels.servicecost) vs the one-set-at-a-time loop (one launch per
+    candidate — the host-loop scoring a swap search would otherwise pay),
+    over a Q x |C| grid."""
+    from repro.core.costs import cost_table
+    from repro.launch.cluster import ClusterEngine
+
+    n, dim = (4096 if smoke else 16384), 8
+    rng = np.random.default_rng(10)
+    ctrs = rng.normal(0, 6, (8, dim))
+    X = (ctrs[rng.integers(0, 8, n)]
+         + rng.normal(0, 0.7, (n, dim))).astype(np.float32)
+    eng = ClusterEngine.fit(X, k=64, mu=2.0, seed=0)
+    grid = (((16, 8), (128, 8), (128, 64)) if smoke
+            else ((1, 8), (16, 8), (16, 64), (128, 8), (128, 64)))
+    for q, cm in grid:
+        sets = X[rng.integers(0, n, (q, cm))]
+        table = cost_table(sets, 2.0)
+        us_batch = _timeit(lambda: eng.service_costs(table), n=3)
+        rows = [cost_table(sets[i:i + 1], 2.0) for i in range(q)]
+
+        def loop_all():
+            out = None
+            for r in rows:
+                out = eng.service_costs(r)
+            return out
+        us_loop = _timeit(loop_all, n=3)
+        _record(f"bench_cluster_engine_Q{q}_C{cm}", us_batch,
+                f"sets_per_s={q/us_batch*1e6:.3g};"
+                f"loop_sets_per_s={q/us_loop*1e6:.3g};"
+                f"batched_speedup={us_loop/us_batch:.1f}x")
+
+
+def bench_engine_tail_latency(smoke: bool = False):
+    """Satellite: query-engine tail latency under interleaved absorb/query
+    (epoch churn — every absorb invalidates the merged-slab cache, so each
+    query pays the lazy re-merge) vs the steady state (cache hit, fused
+    launch only). p50/p95/max per-query microseconds."""
+    from repro.launch.query import SegmentQueryEngine
+    spec = C.MultiSketchSpec(objectives=((C.SUM, 64), (C.COUNT, 64),
+                                         (C.thresh(2.0), 64)), seed=0)
+    n = 8192 if smoke else 32768
+    iters = 16 if smoke else 32
+    rng = np.random.default_rng(11)
+    keys = np.arange(n, dtype=np.int32)
+    w = rng.lognormal(0, 1.5, n).astype(np.float32)
+    preds = [C.key_range(j * (n // 16), (j + 1) * (n // 16) - 1)
+             for j in range(16)]
+    fs = tuple(f for f, _ in spec.objectives)
+
+    eng = SegmentQueryEngine(spec, shards=2)
+    eng.absorb(keys[::2], w[::2], shard=0)
+    eng.absorb(keys[1::2], w[1::2], shard=1)
+    eng.query_many(fs, preds)  # warm every executable in the chain
+
+    def lat(mutate):
+        out = []
+        for i in range(iters):
+            if mutate:
+                eng.absorb(keys[i::iters], w[i::iters], shard=i % 2)
+            t0 = time.perf_counter()
+            r = eng.query_many(fs, preds)
+            out.append((time.perf_counter() - t0) * 1e6)
+        return np.asarray(out), r
+
+    steady, _ = lat(False)
+    churn, _ = lat(True)
+    _record("engine_tail_latency_churn", float(np.percentile(churn, 95)),
+            f"p50={np.percentile(churn, 50):.0f};"
+            f"p95={np.percentile(churn, 95):.0f};max={churn.max():.0f};"
+            f"steady_p50={np.percentile(steady, 50):.0f};"
+            f"steady_p95={np.percentile(steady, 95):.0f};"
+            f"churn_tax_p50={np.percentile(churn, 50)/max(np.percentile(steady, 50), 1e-9):.1f}x")
+
+
 def bench_absorb_throughput(smoke: bool = False):
     """Tentpole claim: the jit'd device-resident MultiSketch fold vs the
     seed's host-side per-batch rebuild-and-merge absorption loop
@@ -396,6 +473,8 @@ def main(argv=None) -> None:
     bench_absorb_throughput(smoke=args.smoke)
     bench_universal_scan(smoke=args.smoke)
     bench_query_engine(smoke=args.smoke)
+    bench_cluster_engine(smoke=args.smoke)
+    bench_engine_tail_latency(smoke=args.smoke)
     bench_gradient_compression()
     if not args.smoke:
         bench_multiobj_scaling()

@@ -42,19 +42,24 @@ class CheckpointManager:
         self._thread = None
 
     # ------------------------------------------------------------- save
-    def save(self, step: int, state, blocking: bool = True):
+    def save(self, step: int, state, blocking: bool = True,
+             extra_meta: dict | None = None):
         """Gather to host and persist. With blocking=False the serialization
-        happens on a background thread (training continues)."""
+        happens on a background thread (training continues). ``extra_meta``:
+        JSON-able dict stored under meta.json["extra"] — static context a
+        restoring job needs before it can build a template (e.g. a
+        MultiSketchSpec encoding, see core.multi_sketch.spec_to_meta)."""
         self.wait()  # never two writers at once (same-step races included)
         if step in self.list_steps():
             return
         host = {k: np.asarray(jax.device_get(v))
                 for k, v in _flatten(state).items()}
         if blocking:
-            self._write(step, host)
+            self._write(step, host, extra_meta)
         else:
             self._thread = threading.Thread(
-                target=self._write, args=(step, host), daemon=True)
+                target=self._write, args=(step, host, extra_meta),
+                daemon=True)
             self._thread.start()
 
     def wait(self):
@@ -62,13 +67,13 @@ class CheckpointManager:
             self._thread.join()
             self._thread = None
 
-    def _write(self, step: int, host: dict):
+    def _write(self, step: int, host: dict, extra_meta: dict | None = None):
         final = os.path.join(self.dir, f"step_{step:010d}")
         tmp = final + ".tmp"
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        meta = {"step": step, "arrays": {}}
+        meta = {"step": step, "arrays": {}, "extra": extra_meta or {}}
         for k, v in host.items():
             fn = k.replace(_SEP, "__") + ".npy"
             path = os.path.join(tmp, fn)
@@ -102,6 +107,22 @@ class CheckpointManager:
                     pass
         return sorted(out)
 
+    def read_meta(self, step: int | None = None):
+        """(step, meta dict) of the given — else the newest readable —
+        checkpoint, without loading arrays. The restore entry point for
+        jobs that must reconstruct their state TEMPLATE from the stored
+        ``extra`` metadata first (e.g. SegmentQueryEngine.from_checkpoint).
+        Raises FileNotFoundError when no checkpoint is readable."""
+        steps = [step] if step is not None else reversed(self.list_steps())
+        for s in steps:
+            try:
+                with open(os.path.join(self.dir, f"step_{s:010d}",
+                                       "meta.json")) as f:
+                    return s, json.load(f)
+            except (OSError, ValueError):   # missing OR corrupt json
+                continue
+        raise FileNotFoundError(f"no readable checkpoint under {self.dir}")
+
     def _load(self, step: int):
         d = os.path.join(self.dir, f"step_{step:010d}")
         with open(os.path.join(d, "meta.json")) as f:
@@ -114,32 +135,39 @@ class CheckpointManager:
             arrays[k] = v
         return meta["step"], arrays
 
+    def restore_step(self, step: int, template, shardings=None):
+        """Restore ONE specific step into ``template``'s structure, or None
+        if that step is corrupt/partial. Lets a caller that derives the
+        template from the step's own metadata (read_meta) keep meta and
+        arrays from the SAME checkpoint while falling back step by step."""
+        try:
+            step, arrays = self._load(step)
+        except Exception as e:  # corrupt -> caller tries previous
+            print(f"[ckpt] skipping step {step}: {e}")
+            return None
+        keys = _flatten(template)
+        missing = set(keys) - set(arrays)
+        if missing:
+            print(f"[ckpt] step {step} missing {len(missing)} arrays")
+            return None
+        shard_map_ = _flatten(shardings) if shardings is not None else {}
+        flat, treedef = jax.tree_util.tree_flatten(template)
+        vals = []
+        for k, tpl in keys.items():
+            arr = arrays[k]
+            sh = shard_map_.get(k)
+            if sh is not None:
+                vals.append(jax.device_put(arr, sh))
+            else:
+                vals.append(jax.device_put(arr))
+        return jax.tree_util.tree_unflatten(treedef, vals)
+
     def restore_latest(self, template, shardings=None):
         """Restore the newest intact checkpoint into ``template``'s structure.
         Corrupt/partial checkpoints are skipped (fault tolerance). Returns
         (state, step) or (None, -1)."""
         for step in reversed(self.list_steps()):
-            try:
-                step, arrays = self._load(step)
-            except Exception as e:  # corrupt -> try previous
-                print(f"[ckpt] skipping step {step}: {e}")
-                continue
-            keys = _flatten(template)
-            missing = set(keys) - set(arrays)
-            if missing:
-                print(f"[ckpt] step {step} missing {len(missing)} arrays")
-                continue
-            shard_map_ = _flatten(shardings) if shardings is not None else {}
-            flat, treedef = jax.tree_util.tree_flatten(template)
-            paths = list(keys)
-            vals = []
-            for k, tpl in keys.items():
-                arr = arrays[k]
-                sh = shard_map_.get(k)
-                if sh is not None:
-                    vals.append(jax.device_put(arr, sh))
-                else:
-                    vals.append(jax.device_put(arr))
-            state = jax.tree_util.tree_unflatten(treedef, vals)
-            return state, step
+            state = self.restore_step(step, template, shardings)
+            if state is not None:
+                return state, step
         return None, -1

@@ -25,8 +25,14 @@ from .multi_sketch import (MultiSketch, MultiSketchSpec, multisketch_absorb,
 from .predicates import (EVERYTHING, SegmentPredicate, encode_predicates,
                          hash_fraction, key_mask, key_range,
                          predicate_matrix)
-from .metric_domains import (MetricSample, estimate_ball_density,
-                             estimate_centrality, universal_metric_sample)
+from .metric_domains import (MetricSample, MetricSketch,
+                             estimate_ball_density, estimate_centrality,
+                             farthest_point_anchors, metric_sample_sketch,
+                             universal_metric_sample)
+from .costs import (MODE_BALL, MODE_COST, CostTable, ServiceCostQuery,
+                    ball_query, cost_query, cost_table, encode_cost_queries,
+                    estimate_service_costs, exact_service_costs,
+                    pad_cost_table, service_cost_values)
 
 __all__ = [
     "StatFn", "COUNT", "SUM", "cap", "thresh", "moment", "combo", "disparity",
@@ -50,6 +56,11 @@ __all__ = [
     "multisketch_select",
     "SegmentPredicate", "EVERYTHING", "key_range", "key_mask",
     "hash_fraction", "encode_predicates", "predicate_matrix",
-    "MetricSample", "universal_metric_sample", "estimate_centrality",
+    "MetricSample", "MetricSketch", "universal_metric_sample",
+    "metric_sample_sketch", "farthest_point_anchors", "estimate_centrality",
     "estimate_ball_density",
+    "CostTable", "ServiceCostQuery", "MODE_COST", "MODE_BALL",
+    "cost_query", "ball_query", "cost_table", "encode_cost_queries",
+    "pad_cost_table", "service_cost_values", "estimate_service_costs",
+    "exact_service_costs",
 ]

@@ -53,7 +53,38 @@ invariants above are exactly what make that correct:
     slab lazily, memoized per absorb epoch. Because merging is EXACT (the
     invariants above), a lazily-merged answer is bit-identical to querying
     the eager ``launch.summary.sharded_multisketch`` result, for any
-    absorb/merge interleaving.
+    absorb/merge interleaving;
+  * slabs are plain arrays, so CHECKPOINTING is ``ckpt.manager`` over the
+    shard list plus the spec stored as JSON extra-metadata
+    (``multi_sketch.spec_to_meta``); ``SegmentQueryEngine.from_checkpoint``
+    reconstructs the spec first, restores the crc-verified slabs into it,
+    and — by the same exactness — a restored-then-merged engine (cross-job
+    fan-in via ``add_shard``) answers exactly like a one-shot build over
+    the union data set.
+
+SERVICE-COST WIRE FORMAT (core.costs + kernels.servicecost): the metric
+domain (paper §7) replaces key predicates with CENTER-SET queries — a
+query is (centers [Q, Cmax, dim], cvalid [Q, Cmax], mu, param, mode) rows
+where mode selects min-dist^mu clustering cost or the radius-r ball
+indicator; center sets are runtime data (an optimizer proposes them), so
+the wire format is arrays, not static rows. An all-invalid row estimates
+exactly 0 (the Q-bucket padding element). ``core.costs.
+service_cost_values`` defines the semantics; the fused kernel evaluates
+the identical function in one launch (centers on sublanes, slab slots on
+lanes), flat in both Q and Cmax.
+
+CLUSTER-ENGINE CONTRACT (launch.cluster.ClusterEngine): the metric twin of
+the query engine. Resident state is a MultiSketch over point keys whose
+weights are the anchor-based universal upper-bound probabilities
+(core.metric_domains) PLUS a coords slab realigned slot-by-slot after
+every donated fold — so the fused service-cost kernel reads coordinates,
+probs and member bits from the same resident arrays. Anchor normalizers
+freeze at the first chunk (ppswor seeds are only coordinated under a
+fixed normalization), every absorb bumps an epoch counter (the external
+staleness signal, mirroring the query engine — queries always read the
+live slab), and every estimate is the same HT sum as
+``sketch_estimate`` with f_C(x) in place of f(w_x) — so per-objective CV
+guarantees carry over to every candidate center set the optimizer scores.
 """
 from __future__ import annotations
 

@@ -12,60 +12,147 @@ p_x = min(1, k * max_a overline{p}_x^{(a)}) with a constant-factor size
 overhead (independent of |X|) — the "(i) size overhead, (ii) efficiency"
 program of §7.
 
+The sample itself is a ``MultiSketch``: the target probabilities are fed
+as WEIGHTS into a single-objective (SUM, k_eff) bottom-k build with
+k_eff = ceil(sum_x p_x) — the standard ppswor realization of a pps design,
+whose conditional inclusion probabilities (Eq. 3) are exact for HT — so
+the metric sample inherits the whole slab stack: device-resident absorb,
+exact merge, checkpointing, and the fused service-cost kernel
+(kernels.servicecost) via the coords-aligned ``ClusterEngine``
+(launch.cluster). ``universal_metric_sample`` scatters the slab back to a
+dense [n] mask for the classic per-point API.
+
+Anchors come from a jit'd farthest-point traversal (``lax.fori_loop``,
+zero host↔device syncs) — the 'few distance queries' construction of §7.
+
 Estimates: Q^(f_q, H) = sum_{x in S ∩ H} f_q(x) / p_x (HT, Eq. 2) — for
 centrality sum_{x} d(q,x)^mu and for ball density |B(q,r) ∩ X|.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+import dataclasses
+from functools import partial
+from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .hashing import uniform01
+from .costs import sq_dists
+from .funcs import SUM
+from .multi_sketch import MultiSketch, MultiSketchSpec, multisketch_build
 
 
 class MetricSample(NamedTuple):
     member: jnp.ndarray   # bool [n]
-    prob: jnp.ndarray     # float32 [n] — query-uniform upper-bound probs
+    prob: jnp.ndarray     # float32 [n] — conditional HT probabilities
     anchors: jnp.ndarray  # int32 [m] — anchor indices
 
 
+class MetricSketch(NamedTuple):
+    """Slab-format metric sample: the sketch plus the coordinates of its
+    slots — everything the fused service-cost kernel consumes."""
+    sketch: MultiSketch   # slab over keys = point indices
+    coords: jnp.ndarray   # float32 [cap, dim] — X[key] per slot (0 invalid)
+    anchors: jnp.ndarray  # int32 [m]
+
+
 def _pairwise_dist(X, Y):
-    d2 = (jnp.sum(X * X, 1)[:, None] + jnp.sum(Y * Y, 1)[None, :]
-          - 2 * X @ Y.T)
-    return jnp.sqrt(jnp.maximum(d2, 0.0))
+    # the shared quadratic-expansion distance of the cost path — anchors,
+    # probs and service costs must never diverge on clamping/regularization
+    return jnp.sqrt(sq_dists(jnp.asarray(X, jnp.float32),
+                             jnp.asarray(Y, jnp.float32)))
+
+
+@partial(jax.jit, static_argnames=("m",))
+def farthest_point_anchors(X, m: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Greedy 2-approx k-center net (farthest-point traversal) from point 0.
+
+    ONE jit'd ``lax.fori_loop`` — no per-anchor host↔device sync. Returns
+    (anchors int32 [m], d_min float32 [n] = distance to the nearest anchor),
+    numerically identical to the sequential host loop (same per-anchor
+    distance columns, same argmax tie-breaks).
+    """
+    X = jnp.asarray(X, jnp.float32)
+    dim = X.shape[1]
+    d_min0 = _pairwise_dist(X, X[:1]).reshape(-1)
+
+    def body(j, carry):
+        anchors, d_min = carry
+        nxt = jnp.argmax(d_min).astype(jnp.int32)
+        xa = jax.lax.dynamic_slice(X, (nxt, 0), (1, dim))
+        d_min = jnp.minimum(d_min, _pairwise_dist(X, xa).reshape(-1))
+        return anchors.at[j].set(nxt), d_min
+
+    anchors, d_min = jax.lax.fori_loop(
+        1, m, body, (jnp.zeros((m,), jnp.int32), d_min0))
+    return anchors, d_min
+
+
+def anchor_upper_weights(X, anchor_coords, mu: float, eps=None, norm=None):
+    """Per-point universal upper-bound weights v_x = max_a p̄_x^{(a)}.
+
+    For each anchor a, p̄^{(a)} is the pps distribution of
+    f_a(x) = (d(a,x)+eps)^mu; by the triangle inequality max_a p̄^{(a)}_x
+    upper-bounds (up to the 2^mu constant) the pps probability of every
+    query q. ``eps``/``norm`` ([m] per-anchor column sums) default to this
+    batch's own statistics; a streaming caller (launch.cluster) freezes
+    them at the first chunk so weights stay comparable across chunks —
+    ppswor seeds r/w are only coordinated under a fixed normalization.
+
+    Returns (v [n], eps, norm).
+    """
+    D = _pairwise_dist(jnp.asarray(X, jnp.float32),
+                       jnp.asarray(anchor_coords, jnp.float32))   # [n, m]
+    if eps is None:
+        eps = jnp.mean(D) * 1e-3 + 1e-12
+    fv = jnp.power(D + eps, mu)
+    if norm is None:
+        norm = jnp.sum(fv, axis=0)
+    v = jnp.max(fv / norm[None, :], axis=1)
+    return v, eps, norm
+
+
+def metric_sample_sketch(X, k: int, mu: float = 1.0, n_anchors: int = 8,
+                         seed: int = 0, scheme: str = "ppswor"
+                         ) -> Tuple[MetricSketch, MultiSketchSpec]:
+    """One slab serving f_q(x) = d(q,x)^mu for ALL queries q.
+
+    X: [n, dim] points. The anchor-based upper-bound probabilities
+    p_x = min(1, 2^mu k v_x) become the weights of a (SUM, k_eff) bottom-k
+    MultiSketch with k_eff = ceil(sum p_x) — same expected size as the
+    classic Bernoulli mask, but mergeable, checkpointable and directly
+    consumable by the fused service-cost kernel.
+    """
+    X = jnp.asarray(X, jnp.float32)
+    n = X.shape[0]
+    anchors, _ = farthest_point_anchors(X, min(n_anchors, n))
+    v, _, _ = anchor_upper_weights(X, X[anchors], mu)
+    p_t = jnp.minimum(1.0, (2.0 ** mu) * k * v)
+    k_eff = max(2, int(np.ceil(float(jnp.sum(p_t)))))
+    spec = MultiSketchSpec(objectives=((SUM, k_eff),), scheme=scheme,
+                           seed=seed)
+    # runtime-seed build: one compiled executable across seeds (spec.seed
+    # stays the mergeability metadata; the hash is keyed by ``seed``)
+    sk = multisketch_build(dataclasses.replace(spec, seed=0),
+                           jnp.arange(n, dtype=jnp.int32), p_t, seed=seed)
+    slot = jnp.clip(sk.keys, 0, n - 1)
+    coords = jnp.where(sk.valid[:, None], X[slot], 0.0)
+    return MetricSketch(sketch=sk, coords=coords, anchors=anchors), spec
 
 
 def universal_metric_sample(X, k: int, mu: float = 1.0, n_anchors: int = 8,
                             seed: int = 0) -> MetricSample:
-    """One sample serving f_q(x) = d(q,x)^mu for ALL queries q.
-
-    X: [n, dim] points. Anchors are a greedy 2-approx k-center net (farthest
-    point traversal) — the 'few distance queries' construction of §7.
-    """
+    """Dense-mask view of :func:`metric_sample_sketch` (classic §7 API):
+    member/prob scattered from the slab back over the n points."""
     X = jnp.asarray(X, jnp.float32)
     n = X.shape[0]
-    # farthest-point anchors
-    anchors = [0]
-    d_min = _pairwise_dist(X, X[:1]).reshape(-1)
-    for _ in range(n_anchors - 1):
-        nxt = int(jnp.argmax(d_min))
-        anchors.append(nxt)
-        d_min = jnp.minimum(d_min, _pairwise_dist(X, X[nxt:nxt + 1]).reshape(-1))
-    A = jnp.asarray(anchors, jnp.int32)
-
-    # per-anchor pps probabilities for f_a(x) = (d(a,x)+eps)^mu; the max over
-    # anchors upper-bounds (up to the triangle-inequality constant) the pps
-    # probability for every query q
-    D = _pairwise_dist(X, X[A])                     # [n, m]
-    eps = jnp.mean(D) * 1e-3 + 1e-12
-    fv = jnp.power(D + eps, mu)                     # [n, m]
-    p_a = fv / jnp.sum(fv, axis=0, keepdims=True)   # per-anchor pps
-    p = jnp.minimum(1.0, (2.0 ** mu) * k * jnp.max(p_a, axis=1))
-    u = uniform01(jnp.arange(n, dtype=jnp.int32), seed)
-    return MetricSample(member=(u < p), prob=p, anchors=A)
+    ms, _ = metric_sample_sketch(X, k, mu=mu, n_anchors=n_anchors, seed=seed)
+    sk = ms.sketch
+    at = jnp.where(sk.valid & sk.member, sk.keys, n)
+    member = jnp.zeros((n,), bool).at[at].set(True, mode="drop")
+    prob = jnp.zeros((n,), jnp.float32).at[at].set(sk.probs, mode="drop")
+    return MetricSample(member=member, prob=prob, anchors=ms.anchors)
 
 
 def estimate_centrality(sample: MetricSample, X, q, mu: float = 1.0):

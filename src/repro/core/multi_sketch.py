@@ -265,8 +265,7 @@ def _rebuild(spec: MultiSketchSpec, keys, weights, valid,
 # public entry points
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("spec", "use_kernels"))
-def _build_jit(keys, weights, active, *, spec, use_kernels):
+def _build_body(keys, weights, active, spec, use_kernels, seed=None):
     n = keys.shape[0]
     npad = max(n, spec.kmax + 2)  # selection needs a (kmax+1)-th candidate
     if npad > n:
@@ -274,25 +273,46 @@ def _build_jit(keys, weights, active, *, spec, use_kernels):
         weights = jnp.pad(weights, (0, npad - n))
         active = jnp.pad(active, (0, npad - n))
     member, prob, aux, seeds, taus = multisketch_select(
-        spec, keys, weights, active, use_kernels=use_kernels)
+        spec, keys, weights, active, use_kernels=use_kernels, seed=seed)
     return _compact(spec, keys, weights, member, prob, aux, seeds, taus,
                     use_kernels)
 
 
+@partial(jax.jit, static_argnames=("spec", "use_kernels"))
+def _build_jit(keys, weights, active, *, spec, use_kernels):
+    return _build_body(keys, weights, active, spec, use_kernels)
+
+
+@partial(jax.jit, static_argnames=("spec", "use_kernels"))
+def _build_seeded_jit(keys, weights, active, seed, *, spec, use_kernels):
+    return _build_body(keys, weights, active, spec, use_kernels, seed=seed)
+
+
 def multisketch_build(spec: MultiSketchSpec, keys, weights, active=None,
-                      use_kernels: Optional[bool] = None) -> MultiSketch:
+                      use_kernels: Optional[bool] = None,
+                      seed=None) -> MultiSketch:
     """One-shot S^(F) ∪ Z over a batch, compacted to the wire format.
 
     Assumes distinct keys (as the paper's data model does); duplicate keys
     in ONE batch are sampled as distinct observations — route repeated keys
     through ``absorb``/``merge``, which dedup by max weight.
+
+    ``seed``: optional RUNTIME hash-seed override (a traced int32 is fine)
+    — many-seed callers (replication studies, the metric-domain sampler)
+    share ONE compiled executable instead of retracing per spec.seed. The
+    seeded path always uses the XLA selection (the kernels bake the seed
+    in at compile time).
     """
     keys = jnp.asarray(keys, jnp.int32)
-    return _build_jit(
-        keys, jnp.asarray(weights, jnp.float32),
-        (jnp.ones(keys.shape, bool) if active is None
-         else jnp.asarray(active, bool)),
-        spec=spec, use_kernels=True if use_kernels is None else use_kernels)
+    weights = jnp.asarray(weights, jnp.float32)
+    active = (jnp.ones(keys.shape, bool) if active is None
+              else jnp.asarray(active, bool))
+    if seed is not None:
+        return _build_seeded_jit(keys, weights, active,
+                                 jnp.asarray(seed, jnp.int32),
+                                 spec=spec, use_kernels=False)
+    return _build_jit(keys, weights, active, spec=spec,
+                      use_kernels=True if use_kernels is None else use_kernels)
 
 
 def multisketch_absorb_inline(spec: MultiSketchSpec, state: MultiSketch,
@@ -381,6 +401,38 @@ def pad_chunk(keys, weights, active=None, chunk: int = 256):
         weights = np.pad(weights, (0, npad - n))
         active = np.pad(active, (0, npad - n))
     return keys, weights, active
+
+
+def statfn_to_meta(f: StatFn) -> dict:
+    """JSON-able encoding of a StatFn (combo recurses)."""
+    d = {"kind": f.kind, "param": float(f.param)}
+    if f.kind == "combo":
+        d["terms"] = [[float(c), statfn_to_meta(g)] for c, g in f.terms]
+    return d
+
+
+def statfn_from_meta(d: dict) -> StatFn:
+    terms = tuple((float(c), statfn_from_meta(g))
+                  for c, g in d.get("terms", []))
+    return StatFn(d["kind"], float(d.get("param", 0.0)), terms)
+
+
+def spec_to_meta(spec: MultiSketchSpec) -> dict:
+    """JSON-able encoding of a spec — the static half of the checkpoint
+    wire format (ckpt.manager stores it beside the slab arrays, so a
+    restoring job reconstructs the spec without sharing code state)."""
+    return {"objectives": [[statfn_to_meta(f), int(k)]
+                           for f, k in spec.objectives],
+            "scheme": spec.scheme, "seed": int(spec.seed),
+            "capacity": int(spec.capacity)}
+
+
+def spec_from_meta(d: dict) -> MultiSketchSpec:
+    return MultiSketchSpec(
+        objectives=tuple((statfn_from_meta(f), int(k))
+                         for f, k in d["objectives"]),
+        scheme=d["scheme"], seed=int(d["seed"]),
+        capacity=int(d.get("capacity", 0)))
 
 
 def multisketch_overflow(sk: MultiSketch) -> jnp.ndarray:

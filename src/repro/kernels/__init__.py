@@ -17,10 +17,11 @@ from .blockselect import (
     bottomk_select)
 from .compact import compact_take, retention_priority
 from .segquery import segment_query_slab
+from .servicecost import service_cost_slab
 from . import ops, ref
 
 __all__ = ["fused_seeds", "fused_seeds_fvals", "rank_counts",
            "block_bottomk", "bottomk_select", "batched_block_bottomk",
            "batched_bottomk_select", "compact_take", "retention_priority",
-           "segment_query_slab",
+           "segment_query_slab", "service_cost_slab",
            "default_interpret", "resolve_interpret", "ops", "ref"]

@@ -62,6 +62,19 @@ def segment_query_ref(keys, weights, probs, member, table, objectives):
                          member, sel)
 
 
+def service_cost_ref(points, probs, member, table, point_weights=None):
+    """Oracle for kernels.servicecost.service_cost_slab: [Q] HT estimates
+    via the shared cost-value oracle + the batched HT estimator."""
+    from repro.core.costs import service_cost_values
+    from repro.core.estimators import estimate_many
+    from repro.core.funcs import SUM
+    pts = jnp.asarray(points, jnp.float32)
+    values = service_cost_values(pts, table)
+    pw = (jnp.ones(pts.shape[:1], jnp.float32) if point_weights is None
+          else jnp.asarray(point_weights, jnp.float32))
+    return estimate_many((SUM,), pw, probs, member, values)[0]
+
+
 def rank_counts_ref(weights, s_h, s_l, active):
     """Oracle for kernels.rankcount.rank_counts. O(n^2)."""
     w = jnp.asarray(weights, jnp.float32)

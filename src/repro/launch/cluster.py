@@ -1,0 +1,308 @@
+"""Metric-space clustering engine (the second serving tier, paper §7).
+
+The counterpart of ``launch.query.SegmentQueryEngine`` for query-indexed
+METRIC objectives: instead of key predicates, a query is a candidate
+center set C and the answer is the HT estimate of its clustering cost
+Sum_x min_{c in C} d(x,c)^mu (or ball coverage). The engine keeps a
+device-RESIDENT sampled point slab:
+
+  * a ``MultiSketch`` over point keys whose weights are the anchor-based
+    universal upper-bound probabilities (core.metric_domains) — absorbing
+    a chunk is the jit'd donated streaming fold, exact under merge;
+  * a coords slab [cap, dim] ALIGNED slot-by-slot with the sketch
+    (realigned on device after every fold — one argsort + gather), so the
+    fused service-cost kernel (kernels.servicecost) reads coordinates and
+    HT weights from the same resident arrays;
+  * anchor normalizers frozen at the first chunk, keeping ppswor seeds
+    comparable across chunks (coordination under a fixed normalization).
+
+``service_costs`` answers a Q-batch of candidate sets x the slab in ONE
+fused launch (Q bucketed to a quantum so jit traces stay bounded).
+
+On top rides the paper's optimization meta-algorithm — compute a sample
+once, then optimize over estimated costs:
+
+  * :func:`local_search` — swap-based k-median/k-means local search where
+    ALL candidate swaps of a round (1 + k * n_cand sets) are scored by one
+    fused Q-batch; pass ``scorer=exact_scorer(X)`` to run the identical
+    search against ground-truth costs (the small-instance oracle
+    cross-check);
+  * :func:`kcenter` — sample-based greedy 2-approx k-center (jit'd
+    farthest-point on the member slots) with fused ball-coverage
+    validation.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costs import (CostTable, ball_query, cost_table,
+                              encode_cost_queries, estimate_service_costs,
+                              exact_service_costs, pad_cost_table)
+from repro.core.funcs import SUM
+from repro.core.metric_domains import (anchor_upper_weights,
+                                       farthest_point_anchors)
+from repro.core.multi_sketch import (MultiSketchSpec, multisketch_absorb,
+                                     multisketch_empty, pad_chunk)
+
+
+@jax.jit
+def _align_coords(new_keys, cand_keys, cand_coords):
+    """coords for each slab slot, looked up among candidate (key, coord)
+    rows — the device-side realignment after a donated fold."""
+    order = jnp.argsort(cand_keys)
+    sk = cand_keys[order]
+    sc = cand_coords[order]
+    pos = jnp.clip(jnp.searchsorted(sk, new_keys), 0, sk.shape[0] - 1)
+    hit = (sk[pos] == new_keys) & (new_keys >= 0)
+    return jnp.where(hit[:, None], sc[pos], 0.0)
+
+
+class ClusterEngine:
+    """Resident sampled point slab + fused batched service-cost queries.
+
+    ``k`` is the slab sample-size budget (the bottom-k parameter over the
+    anchor upper-bound weights); per §7 a target per-query sample of size
+    k_q needs k ≈ 2^mu k_q x (anchor overhead). Points are unit-weight
+    (clustering over a point set, the paper's metric data model).
+    """
+
+    def __init__(self, dim: int, k: int = 64, mu: float = 2.0,
+                 n_anchors: int = 8, scheme: str = "ppswor", seed: int = 0,
+                 chunk: int = 256, q_quantum: int = 16, q_max: int = 128,
+                 use_kernels: Optional[bool] = None):
+        self.dim = int(dim)
+        self.k = int(k)
+        self.mu = float(mu)
+        self.n_anchors = int(n_anchors)
+        self.chunk = int(chunk)
+        self.q_quantum = int(q_quantum)
+        self.q_max = int(q_max)   # per-launch Q ceiling (kernel VMEM budget)
+        self.use_kernels = use_kernels
+        self._handed_out = False  # sample() gave away live slab buffers
+        self.spec = MultiSketchSpec(objectives=((SUM, self.k),),
+                                    scheme=scheme, seed=seed)
+        self._sketch = multisketch_empty(self.spec)
+        self._coords = jnp.zeros((self.spec.cap, self.dim), jnp.float32)
+        self._anchor_coords = None   # [m, dim] frozen at first absorb
+        self._eps = None             # frozen distance regularizer
+        self._norm = None            # frozen per-anchor column sums
+        self._epoch = 0
+        self._next_key = 0
+
+    @classmethod
+    def fit(cls, X, **kw) -> "ClusterEngine":
+        """One-shot engine over a full point set."""
+        X = np.asarray(X, np.float32)
+        eng = cls(dim=X.shape[1], **kw)
+        eng.absorb(X)
+        return eng
+
+    # -- resident state ----------------------------------------------------
+    @property
+    def epoch(self) -> int:
+        return self._epoch
+
+    @property
+    def anchors(self):
+        return self._anchor_coords
+
+    def absorb(self, points, keys=None):
+        """Fold a chunk of points into the resident slab (donated device
+        fold + coords realignment). ``keys`` default to a running global
+        index; re-absorbing a key must present the same coordinates."""
+        P = jnp.asarray(points, jnp.float32).reshape(-1, self.dim)
+        b = P.shape[0]
+        if self._anchor_coords is None:
+            a_idx, _ = farthest_point_anchors(P, min(self.n_anchors, b))
+            self._anchor_coords = P[a_idx]
+            _, self._eps, self._norm = anchor_upper_weights(
+                P, self._anchor_coords, self.mu)
+        v, _, _ = anchor_upper_weights(P, self._anchor_coords, self.mu,
+                                       eps=self._eps, norm=self._norm)
+        if keys is None:
+            keys = np.arange(self._next_key, self._next_key + b,
+                             dtype=np.int32)
+            self._next_key += b
+        else:
+            # keep the default-key counter ahead of explicit ids, so a later
+            # default-keyed absorb can never alias different points
+            keys = np.asarray(keys, np.int32)
+            self._next_key = max(self._next_key, int(keys.max()) + 1)
+        keys, v, act = pad_chunk(np.asarray(keys, np.int32),
+                                 np.asarray(v, np.float32),
+                                 np.ones((b,), bool), self.chunk)
+        Ppad = jnp.pad(P, ((0, keys.shape[0] - b), (0, 0)))
+        # a handed-out sample() may ALIAS the live slab; re-point the engine
+        # at fresh buffers first, so the donated fold cannot invalidate the
+        # caller's copy (same guard as SegmentQueryEngine.absorb)
+        if self._handed_out:
+            self._sketch = jax.tree.map(jnp.copy, self._sketch)
+            self._handed_out = False
+        # the fold donates the resident slab buffers — snapshot the old keys
+        # first; old coords are engine-owned and not part of the sketch
+        old_keys = jnp.copy(self._sketch.keys)
+        old_coords = self._coords
+        self._sketch = multisketch_absorb(self._sketch, keys, v, act,
+                                          spec=self.spec,
+                                          use_kernels=self.use_kernels)
+        self._coords = _align_coords(
+            self._sketch.keys,
+            jnp.concatenate([old_keys, jnp.asarray(keys, jnp.int32)]),
+            jnp.concatenate([old_coords, Ppad]))
+        self._epoch += 1
+
+    def sample(self):
+        """(coords [cap, dim], probs [cap], member [cap]) — the resident
+        slab the fused kernel consumes. The arrays stay valid across later
+        ``absorb`` calls (the next fold re-points the engine instead of
+        donating the handed-out buffers)."""
+        self._handed_out = True
+        return self._coords, self._sketch.probs, self._sketch.member
+
+    def total_count(self) -> float:
+        """HT estimate of the number of absorbed points."""
+        return float(jnp.sum(jnp.where(
+            self._sketch.member,
+            1.0 / jnp.maximum(self._sketch.probs, 1e-30), 0.0)))
+
+    # -- fused batched queries ---------------------------------------------
+    def service_costs(self, queries) -> np.ndarray:
+        """HT clustering-cost / ball-density estimates for a Q-batch of
+        service-cost queries -> float numpy [Q]. ONE fused launch over the
+        slab per ``q_max`` rows regardless of Cmax (kernels.servicecost —
+        its [Q*Cmax, 128] distance block must fit VMEM, so oversize batches
+        are split); Q pads to ``q_quantum`` with null rows so same-bucket
+        batches share one compiled executable."""
+        table = encode_cost_queries(queries)
+        table = CostTable(*(np.asarray(x) for x in table))
+        q = table.mu.shape[0]
+        out = np.empty((q,), np.float32)
+        for s in range(0, q, self.q_max):
+            part = CostTable(*(x[s:s + self.q_max] for x in table))
+            qp = part.mu.shape[0]
+            qpad = max(self.q_quantum,
+                       -(-qp // self.q_quantum) * self.q_quantum)
+            est = estimate_service_costs(
+                self._coords, self._sketch.probs, self._sketch.member,
+                pad_cost_table(part, qpad), use_kernels=self.use_kernels)
+            out[s:s + qp] = np.asarray(est)[:qp]
+        return out
+
+    def clustering_cost(self, centers, mu: Optional[float] = None) -> float:
+        """Estimated Sum_x min_{c in centers} d(x,c)^mu for ONE set."""
+        from repro.core.costs import cost_query
+        return float(self.service_costs(
+            cost_query(centers, self.mu if mu is None else mu))[0])
+
+    def ball_density(self, center, r: float) -> float:
+        """Estimated |{x : d(x, center-set) <= r}| for ONE set."""
+        return float(self.service_costs(ball_query(center, r))[0])
+
+
+# ---------------------------------------------------------------------------
+# the optimization meta-algorithm (sample once, optimize over estimates)
+# ---------------------------------------------------------------------------
+
+class ClusterResult(NamedTuple):
+    centers: np.ndarray     # [k, dim]
+    est_cost: float         # scorer cost of the returned set
+    history: List[float]    # accepted cost per round (history[0] = init)
+    rounds: int             # swap rounds taken
+
+
+def exact_scorer(X, point_weights=None) -> Callable[[CostTable], np.ndarray]:
+    """Ground-truth scorer over the FULL point set — the oracle the
+    sample-based search is cross-checked against on small instances."""
+    X = jnp.asarray(X, jnp.float32)
+
+    def score(table: CostTable) -> np.ndarray:
+        return np.asarray(exact_service_costs(X, table,
+                                              point_weights=point_weights))
+    return score
+
+
+def _candidate_pool(engine: ClusterEngine, n_cand: int) -> np.ndarray:
+    """Deterministic candidate center locations: member slots strided
+    evenly across the slab. Slab order is retention priority (sampling
+    weight desc); the anchor upper-bound weights grow with distance from
+    the anchors, so a PREFIX would be all outliers — the stride covers the
+    whole weight range, cluster cores included."""
+    # private reads (host copies only) — don't trip the hand-out guard
+    cand = np.asarray(engine._coords)[np.asarray(engine._sketch.member)]
+    m = cand.shape[0]
+    if m == 0:
+        raise ValueError("empty sample — absorb points first")
+    if m <= n_cand:
+        return cand
+    return cand[np.unique(np.linspace(0, m - 1, n_cand).astype(int))]
+
+
+def local_search(engine: ClusterEngine, k: int, mu: Optional[float] = None,
+                 rounds: int = 16, n_cand: int = 32, tol: float = 1e-3,
+                 scorer: Optional[Callable] = None) -> ClusterResult:
+    """Sample-based swap local search for k-median (mu=1) / k-means (mu=2).
+
+    Candidates are the engine's member slots; every round scores the
+    current set plus ALL k x n_cand single swaps as ONE service-cost
+    Q-batch (one fused launch via the engine scorer), accepts the best
+    improving swap, and stops when no swap improves by ``tol``
+    relatively. ``scorer`` defaults to the engine's fused HT estimator;
+    pass :func:`exact_scorer` to run the identical search on ground-truth
+    costs.
+    """
+    mu = engine.mu if mu is None else float(mu)
+    if scorer is None:
+        scorer = engine.service_costs
+    cand = _candidate_pool(engine, n_cand)
+    ncand = cand.shape[0]
+    k = min(k, ncand)
+    # deterministic k-center init over the candidate pool
+    init_idx, _ = farthest_point_anchors(jnp.asarray(cand), k)
+    cur = np.asarray(cand)[np.asarray(init_idx)]              # [k, dim]
+
+    history = [float(np.asarray(scorer(cost_table(cur[None], mu)))[0])]
+    for _ in range(rounds):
+        # row 0: current set; row 1 + i*ncand + j: swap center i -> cand j
+        sets = np.broadcast_to(cur, (k * ncand, k, cur.shape[1])).copy()
+        sets = sets.reshape(k, ncand, k, -1)
+        for i in range(k):
+            sets[i, :, i, :] = cand
+        batch = np.concatenate([cur[None], sets.reshape(k * ncand, k, -1)])
+        scores = np.asarray(scorer(cost_table(batch, mu)))
+        best = int(np.argmin(scores[1:])) + 1
+        if scores[best] < scores[0] * (1.0 - tol):
+            i, j = divmod(best - 1, ncand)
+            cur = cur.copy()
+            cur[i] = cand[j]
+            history.append(float(scores[best]))
+        else:
+            break
+    return ClusterResult(centers=cur, est_cost=history[-1],
+                         history=history, rounds=len(history) - 1)
+
+
+class KCenterResult(NamedTuple):
+    centers: np.ndarray   # [k, dim]
+    radius: float         # max sample-point distance to the centers
+    coverage_est: float   # HT estimate of points within ``radius``
+    total_est: float      # HT estimate of |X| (coverage should match)
+
+
+def kcenter(engine: ClusterEngine, k: int) -> KCenterResult:
+    """Sample-based greedy k-center (2-approx farthest-point on the member
+    slots, one jit'd fori_loop) + fused ball-coverage validation: at the
+    returned radius the estimated coverage should match the estimated
+    total count (every point served within ``radius``)."""
+    pts = jnp.asarray(
+        np.asarray(engine._coords)[np.asarray(engine._sketch.member)])
+    k = min(k, pts.shape[0])
+    idx, d_min = farthest_point_anchors(pts, k)
+    centers = np.asarray(pts[idx])
+    radius = float(jnp.max(d_min))
+    cov = engine.ball_density(centers, radius * (1 + 1e-5))
+    return KCenterResult(centers=centers, radius=radius, coverage_est=cov,
+                         total_est=engine.total_count())

@@ -98,6 +98,13 @@ class SegmentQueryEngine:
         self._shards[shard] = jax.tree.map(jnp.copy, sketch)
         self._epoch += 1
 
+    def add_shard(self, sketch: MultiSketch):
+        """Append a prebuilt slab as a NEW shard (copied in, like
+        ``set_shard``) — cross-job fan-in: slabs restored from another
+        job's checkpoint merge lazily with the resident state."""
+        self._shards.append(jax.tree.map(jnp.copy, sketch))
+        self._epoch += 1
+
     def load_stacked(self, stacked: MultiSketch):
         """Adopt a stacked batch of per-shard slabs (leaves [m, ...], e.g.
         from ``launch.summary.sharded_multisketch_shards``) as the resident
@@ -119,6 +126,68 @@ class SegmentQueryEngine:
         eng = cls(spec, shards=stacked.keys.shape[0], **kw)
         eng.load_stacked(stacked)
         return eng
+
+    # -- checkpointing -----------------------------------------------------
+    def save_checkpoint(self, directory: str, step: Optional[int] = None,
+                        blocking: bool = True):
+        """Persist the resident per-shard slabs + the spec (as JSON extra
+        metadata) through ckpt.manager — atomic, crc-checked, keep-last-k.
+        The slabs are plain arrays, so the checkpoint is mesh- and
+        job-agnostic: any process restores it with ``from_checkpoint`` and
+        merges it with its own state (threshold closure keeps that exact).
+
+        ``step`` defaults to one past the newest existing step — the
+        manager treats an already-present step as saved and skips it, so
+        re-saving an updated engine must mint a fresh step number.
+        """
+        from repro.ckpt.manager import CheckpointManager
+        from repro.core.multi_sketch import spec_to_meta
+        mgr = CheckpointManager(directory)
+        if step is None:
+            step = max(mgr.list_steps(), default=-1) + 1
+        mgr.save(step, {"shards": list(self._shards)}, blocking=blocking,
+                 extra_meta={"multisketch_spec": spec_to_meta(self.spec),
+                             "num_shards": len(self._shards),
+                             "b_quantum": self.b_quantum,
+                             "chunk": self.chunk})
+        return mgr
+
+    @classmethod
+    def from_checkpoint(cls, directory: str,
+                        use_kernels: Optional[bool] = None
+                        ) -> "SegmentQueryEngine":
+        """Rebuild an engine from the newest intact checkpoint: the spec
+        comes from the stored metadata, the per-shard slabs from the
+        crc-verified arrays — BOTH from the SAME step, falling back step by
+        step when one is corrupt (a newer save's spec must never be paired
+        with an older save's slabs). Queries over the restored engine are
+        bit-identical to the saved one's (the slabs ARE the state)."""
+        from repro.ckpt.manager import CheckpointManager
+        from repro.core.multi_sketch import spec_from_meta
+        mgr = CheckpointManager(directory)
+        for step in reversed(mgr.list_steps()):
+            try:
+                _, meta = mgr.read_meta(step)
+                ex = meta["extra"]
+                spec = spec_from_meta(ex["multisketch_spec"])
+                num_shards = int(ex["num_shards"])
+            except (FileNotFoundError, KeyError, ValueError, TypeError):
+                continue
+            template = {"shards": [multisketch_empty(spec)
+                                   for _ in range(num_shards)]}
+            state = mgr.restore_step(step, template)
+            if state is None:
+                continue
+            eng = cls(spec, shards=num_shards,
+                      b_quantum=int(ex.get("b_quantum", 16)),
+                      chunk=int(ex.get("chunk", 256)),
+                      use_kernels=use_kernels)
+            eng._shards = [MultiSketch(*(jnp.asarray(x) for x in s))
+                           for s in state["shards"]]
+            eng._epoch += 1
+            return eng
+        raise FileNotFoundError(
+            f"no intact checkpoint restorable under {directory}")
 
     # -- lazy merge-on-demand ----------------------------------------------
     @property

@@ -94,6 +94,25 @@ def main(argv=None):
         print("[telemetry] est tokens, 50% coordinated key sample:",
               float(stats[0, 1]))
 
+        # request-shape clustering: the metric-domain tier over the same
+        # request log — a resident sampled point slab scored by the fused
+        # service-cost kernel (launch.cluster); a sharded server absorbs
+        # per-replica request features and answers capacity-planning
+        # queries (k typical request shapes, coverage radii) from the
+        # sample alone.
+        from repro.launch.cluster import ClusterEngine, local_search
+        gen_np = np.asarray(gen)
+        feats = np.stack(
+            [np.full(args.batch, args.prompt_len + args.gen, np.float32),
+             np.array([len(np.unique(r)) for r in gen_np], np.float32)], 1)
+        ceng = ClusterEngine(dim=2, k=16, mu=2.0,
+                             n_anchors=min(4, args.batch), seed=args.seed)
+        ceng.absorb(feats)
+        res = local_search(ceng, k=min(2, args.batch), rounds=4, n_cand=8)
+        print("[cluster] request-shape centers:",
+              np.round(res.centers, 2).tolist())
+        print("[cluster] est k-means service cost:", round(res.est_cost, 3))
+
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,145 @@
+"""Sketch checkpointing + cross-job merge: spec metadata round-trip,
+engine save/restore bit-identity, restore -> merge -> query exactness, and
+corrupt-checkpoint fallback."""
+import os
+
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.ckpt.manager import CheckpointManager
+from repro.core.multi_sketch import spec_from_meta, spec_to_meta
+from repro.launch.query import SegmentQueryEngine
+
+
+def _objectives():
+    return ((C.SUM, 16), (C.COUNT, 8), (C.thresh(2.0), 12))
+
+
+def _data(n=2400, seed=3):
+    rng = np.random.default_rng(seed)
+    keys = rng.permutation(np.arange(n)).astype(np.int32)
+    w = rng.lognormal(0, 1.5, n).astype(np.float32)
+    return keys, w
+
+
+def test_spec_meta_roundtrip_including_combo():
+    for spec in (
+            C.MultiSketchSpec(objectives=_objectives(), seed=9),
+            C.MultiSketchSpec(objectives=((C.moment(1.5), 4),),
+                              scheme="priority", capacity=64),
+            C.MultiSketchSpec(objectives=(
+                (C.combo((2.0, C.SUM), (0.5, C.cap(3.0))), 8),), seed=1)):
+        back = spec_from_meta(spec_to_meta(spec))
+        assert back == spec
+        import json
+        json.dumps(spec_to_meta(spec))  # must be JSON-able
+
+
+def test_engine_checkpoint_roundtrip_bit_identical(tmp_path):
+    keys, w = _data()
+    spec = C.MultiSketchSpec(objectives=_objectives(), seed=5)
+    eng = SegmentQueryEngine(spec, shards=2, b_quantum=8)
+    eng.absorb(keys[::2], w[::2], shard=0)
+    eng.absorb(keys[1::2], w[1::2], shard=1)
+    eng.save_checkpoint(str(tmp_path), step=7)
+
+    eng2 = SegmentQueryEngine.from_checkpoint(str(tmp_path))
+    assert eng2.spec == spec
+    assert eng2.num_shards == 2 and eng2.b_quantum == 8
+    for a, b in zip(eng.merged, eng2.merged):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    preds = [C.EVERYTHING, C.key_range(0, 1199), C.hash_fraction(0.5)]
+    np.testing.assert_array_equal(eng.query_many(predicates=preds),
+                                  eng2.query_many(predicates=preds))
+    # the restored engine keeps absorbing (donated fold on fresh buffers);
+    # heavy keys MUST enter the SUM sample, so the estimate reflects them
+    before = eng2.query(C.SUM)
+    eng2.absorb(np.arange(50_000, 50_100),
+                np.full(100, 1000.0, np.float32))
+    assert eng2.query(C.SUM) > before + 50_000
+
+
+def test_restore_merge_query_roundtrip(tmp_path):
+    """Cross-job fan-in: restore job B's slabs into job A's engine; the
+    merged answer equals a one-shot build over the union data set."""
+    keys_a, w_a = _data(seed=1)
+    keys_b = (100_000 + np.arange(1500)).astype(np.int32)
+    w_b = np.random.default_rng(2).lognormal(0, 1.5, 1500).astype(np.float32)
+    spec = C.MultiSketchSpec(objectives=_objectives(), seed=11)
+
+    da, db = str(tmp_path / "job_a"), str(tmp_path / "job_b")
+    ea = SegmentQueryEngine(spec, shards=2)
+    ea.absorb(keys_a[::2], w_a[::2], shard=0)
+    ea.absorb(keys_a[1::2], w_a[1::2], shard=1)
+    ea.save_checkpoint(da)
+    eb = SegmentQueryEngine(spec)
+    eb.absorb(keys_b, w_b)
+    eb.save_checkpoint(db)
+
+    eng = SegmentQueryEngine.from_checkpoint(da)
+    donor = SegmentQueryEngine.from_checkpoint(db)
+    for s in donor._shards:
+        eng.add_shard(s)
+    assert eng.num_shards == 3
+
+    union = C.multisketch_merge(
+        spec, C.multisketch_build(spec, keys_a, w_a),
+        C.multisketch_build(spec, keys_b, w_b))
+    for f, _ in spec.objectives:
+        got = eng.query(f)
+        want = float(C.multisketch_estimate(union, f))
+        assert got == pytest.approx(want, rel=1e-5), f
+    # segment restricted to job B's key range: only B's mass
+    got_b = eng.query(C.SUM, C.key_range(100_000, 200_000))
+    want_b = float(C.multisketch_estimate(
+        union, C.SUM, segment_fn=lambda k: (k >= 100_000)))
+    assert got_b == pytest.approx(want_b, rel=1e-5)
+
+
+def test_corrupt_checkpoint_falls_back_to_previous(tmp_path):
+    """Fallback must pair meta AND arrays from the SAME step: the corrupt
+    newest save has MORE shards than the intact older one, so mixing the
+    newest metadata with the older arrays could never restore."""
+    keys, w = _data(seed=4)
+    spec = C.MultiSketchSpec(objectives=_objectives(), seed=2)
+    eng = SegmentQueryEngine(spec)
+    eng.absorb(keys[:1000], w[:1000])
+    eng.save_checkpoint(str(tmp_path), step=1)
+    want = eng.query(C.SUM)
+    eng.absorb(keys[1000:], w[1000:])
+    extra = C.multisketch_build(spec, np.arange(10_000, 10_200),
+                                np.ones(200, np.float32))
+    eng.add_shard(extra)
+    eng.save_checkpoint(str(tmp_path), step=2)
+    # corrupt the newest step's arrays -> restore must fall back to step 1
+    step2 = tmp_path / "step_0000000002"
+    victim = next(p for p in sorted(os.listdir(step2))
+                  if p.endswith(".npy"))
+    with open(step2 / victim, "r+b") as f:
+        f.seek(60)
+        f.write(b"\xff" * 64)
+    eng2 = SegmentQueryEngine.from_checkpoint(str(tmp_path))
+    assert eng2.num_shards == 1
+    assert eng2.query(C.SUM) == pytest.approx(want, rel=1e-6)
+
+
+def test_save_checkpoint_default_step_auto_bumps(tmp_path):
+    """Re-saving an updated engine must not be silently dropped by the
+    manager's step-exists skip — the default step mints a fresh number."""
+    spec = C.MultiSketchSpec(objectives=_objectives(), seed=3)
+    eng = SegmentQueryEngine(spec)
+    eng.absorb(np.arange(300), np.ones(300, np.float32))
+    eng.save_checkpoint(str(tmp_path))
+    eng.absorb(np.arange(1000, 1300), np.full(300, 5.0, np.float32))
+    eng.save_checkpoint(str(tmp_path))
+    eng2 = SegmentQueryEngine.from_checkpoint(str(tmp_path))
+    assert eng2.query(C.SUM) == pytest.approx(eng.query(C.SUM), rel=1e-6)
+
+
+def test_read_meta_missing_dir_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "empty"))
+    with pytest.raises(FileNotFoundError):
+        mgr.read_meta()
+    with pytest.raises(FileNotFoundError):
+        SegmentQueryEngine.from_checkpoint(str(tmp_path / "empty2"))
