@@ -229,7 +229,7 @@ def bench_query_engine(smoke: bool = False):
     rng = np.random.default_rng(9)
     keys = np.arange(n, dtype=np.int32)
     w = rng.lognormal(0, 1.5, n).astype(np.float32)
-    grid = (((16, 3), (128, 8)) if smoke
+    grid = (((1, 1), (16, 3), (128, 8)) if smoke
             else ((1, 1), (1, 3), (1, 8), (16, 1), (16, 3), (16, 8),
                   (128, 1), (128, 3), (128, 8)))
     span = n // 128
@@ -250,7 +250,11 @@ def bench_query_engine(smoke: bool = False):
             out = None
             for f in fs:
                 for p in preds:
-                    out = C.multisketch_estimate_batch(sk, (f,), (p,))
+                    # a per-query serving loop delivers each answer to the
+                    # host before the next request (same sync discipline
+                    # query_many's numpy return pays once per batch)
+                    out = np.asarray(C.multisketch_estimate_batch(sk, (f,),
+                                                                  (p,)))
             return out
         us_loop = _timeit(loop_all, n=3)
         qps_loop = b * nf / us_loop * 1e6
@@ -314,7 +318,11 @@ def bench_engine_tail_latency(smoke: bool = False):
     eng = SegmentQueryEngine(spec, shards=2)
     eng.absorb(keys[::2], w[::2], shard=0)
     eng.absorb(keys[1::2], w[1::2], shard=1)
-    eng.query_many(fs, preds)  # warm every executable in the chain
+    # warm every executable in the chain, incl. the churn path's
+    # incremental delta fold (absorb -> query compiles _absorb_into_jit)
+    eng.query_many(fs, preds)
+    eng.absorb(keys[:1], w[:1], shard=0)
+    eng.query_many(fs, preds)
 
     def lat(mutate):
         out = []
@@ -327,13 +335,51 @@ def bench_engine_tail_latency(smoke: bool = False):
         return np.asarray(out), r
 
     steady, _ = lat(False)
+    stats0 = dict(eng.merge_stats)
     churn, _ = lat(True)
+    inc = eng.merge_stats["incremental"] - stats0["incremental"]
+    full = eng.merge_stats["full"] - stats0["full"]
     _record("engine_tail_latency_churn", float(np.percentile(churn, 95)),
             f"p50={np.percentile(churn, 50):.0f};"
             f"p95={np.percentile(churn, 95):.0f};max={churn.max():.0f};"
             f"steady_p50={np.percentile(steady, 50):.0f};"
             f"steady_p95={np.percentile(steady, 95):.0f};"
+            f"merges_incremental={inc};merges_full={full};"
             f"churn_tax_p50={np.percentile(churn, 50)/max(np.percentile(steady, 50), 1e-9):.1f}x")
+
+
+def bench_incremental_merge(smoke: bool = False):
+    """PR 5 tentpole: epoch maintenance cost when ONE shard absorbed — the
+    delta fold into the cached merged slab (multisketch_absorb_into,
+    donated buffers, (1 + dirty) x capacity re-selection) vs the full
+    stacked re-merge over all S shards. The gap widens with S: the full
+    path stacks and rebuilds S x capacity slots every epoch."""
+    from repro.launch.query import SegmentQueryEngine
+    spec = C.MultiSketchSpec(objectives=((C.SUM, 64), (C.COUNT, 64),
+                                         (C.thresh(2.0), 64)), seed=0)
+    n = 8192 if smoke else 32768
+    rng = np.random.default_rng(12)
+    keys = np.arange(n, dtype=np.int32)
+    w = rng.lognormal(0, 1.5, n).astype(np.float32)
+    for shards in ((2, 8) if smoke else (2, 4, 8)):
+        engs = {"incremental": SegmentQueryEngine(spec, shards=shards),
+                "full": SegmentQueryEngine(spec, shards=shards, max_delta=0)}
+        for eng in engs.values():
+            for i in range(shards):
+                eng.absorb(keys[i::shards], w[i::shards], shard=i)
+            eng._materialize_merged()
+        us = {}
+        for name, eng in engs.items():
+            def epoch(i=[0], eng=eng):
+                i[0] += 1
+                eng.absorb(keys[i[0] % 7::7], w[i[0] % 7::7],
+                           shard=i[0] % shards)
+                return eng._materialize_merged().member
+            epoch()  # warm the per-path executables
+            us[name] = _timeit(epoch, n=5)
+        _record(f"incremental_merge_S{shards}", us["incremental"],
+                f"full_us={us['full']:.0f};"
+                f"speedup={us['full']/us['incremental']:.1f}x")
 
 
 def bench_absorb_throughput(smoke: bool = False):
@@ -470,6 +516,7 @@ def main(argv=None) -> None:
         bench_thm_3_1_estimation_cv()
         bench_sampling_throughput()
     bench_merge_throughput()
+    bench_incremental_merge(smoke=args.smoke)
     bench_absorb_throughput(smoke=args.smoke)
     bench_universal_scan(smoke=args.smoke)
     bench_query_engine(smoke=args.smoke)

@@ -17,7 +17,8 @@ from .estimators import (cv_bound, estimate, estimate_many,
 from .merge import (Sketch, build_sketch, merge_many, merge_sketches,
                     sketch_capacity, sketch_estimate)
 from .multi_sketch import (MultiSketch, MultiSketchSpec, multisketch_absorb,
-                           multisketch_absorb_inline, multisketch_build,
+                           multisketch_absorb_inline, multisketch_absorb_into,
+                           multisketch_absorb_slabs, multisketch_build,
                            multisketch_empty, multisketch_estimate,
                            multisketch_estimate_batch, multisketch_merge,
                            multisketch_merge_stacked, multisketch_overflow,
@@ -49,7 +50,8 @@ __all__ = [
     "Sketch", "build_sketch", "merge_sketches", "merge_many",
     "sketch_capacity", "sketch_estimate",
     "MultiSketch", "MultiSketchSpec", "multisketch_absorb",
-    "multisketch_absorb_inline",
+    "multisketch_absorb_inline", "multisketch_absorb_into",
+    "multisketch_absorb_slabs",
     "multisketch_build", "multisketch_empty", "multisketch_estimate",
     "multisketch_estimate_batch", "multisketch_query_many",
     "multisketch_merge", "multisketch_merge_stacked", "multisketch_overflow",

@@ -54,6 +54,32 @@ invariants above are exactly what make that correct:
     invariants above), a lazily-merged answer is bit-identical to querying
     the eager ``launch.summary.sharded_multisketch`` result, for any
     absorb/merge interleaving;
+
+  INCREMENTAL-MERGE CONTRACT (dirty-epoch semantics). The engine tracks,
+  per shard, the epoch of its last mutation and the epoch snapshot its
+  cached merged slab reflects. When an epoch's dirty set is a strict
+  subset of the shards (bounded by ``max_delta``), the merged slab is
+  maintained INCREMENTALLY: the dirty shards' slabs are folded straight
+  into the cached merged slab (``multi_sketch.multisketch_absorb_into`` —
+  one (1 + |dirty|) x capacity re-selection, cached-slab buffers donated)
+  instead of re-running ``merge_stacked`` over all S shards. Exactness is
+  the same threshold-closure argument: the cached slab summarizes the
+  union U of ALL shards' data at snapshot time, each dirty slab
+  summarizes its shard's current data D_i, and absorbs only ADD data, so
+  sketch(U ∪ (∪ D_i)) — what the delta fold re-selects — is the sketch
+  of the same union data set the full re-merge would summarize:
+  BIT-IDENTICAL, asserted across schemes and |F| in the test tier. The
+  contract's preconditions, enforced by the engine:
+    * monotone history — ``set_shard``/``load_stacked`` REPLACE shard
+      content (old keys may vanish from the union), so they drop the
+      cache and force the next merge down the full path;
+    * non-truncating capacity (>= the spec default) — a truncated
+      compaction voids exact merging, so delta and full results could
+      legitimately diverge; the engine then always re-merges fully;
+    * donated-buffer discipline — the delta fold consumes only
+      engine-owned merged-slab buffers; a slab handed out via the public
+      ``merged`` property is re-pointed (copied) first, and resident
+      shard slabs ride the delta WITHOUT donation.
   * slabs are plain arrays, so CHECKPOINTING is ``ckpt.manager`` over the
     shard list plus the spec stored as JSON extra-metadata
     (``multi_sketch.spec_to_meta``); ``SegmentQueryEngine.from_checkpoint``

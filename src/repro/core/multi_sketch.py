@@ -359,6 +359,99 @@ def multisketch_absorb(state: MultiSketch, keys, weights, active=None, *,
         spec=spec, use_kernels=True if use_kernels is None else use_kernels)
 
 
+@partial(jax.jit, static_argnames=("spec", "use_kernels"),
+         donate_argnums=(0, 1, 2, 3, 4, 5, 6, 7))
+def _absorb_into_jit(skeys, sweights, sprobs, sseeds, smember, saux, svalid,
+                     staus, dkeys, dweights, dvalid, *, spec, use_kernels):
+    """The delta fold body: flat state leaves (all donated — the incremental
+    merge reuses the cached merged slab's buffers) + the delta's
+    keys/weights/valid only (seeds/probs are recomputed by re-selection, so
+    the delta slabs' other leaves never leave the device's resident state)."""
+    del sprobs, sseeds, smember, saux, staus  # donated, recomputed
+    return _rebuild(spec,
+                    jnp.concatenate([skeys, dkeys]),
+                    jnp.concatenate([sweights, dweights]),
+                    jnp.concatenate([svalid, dvalid]), use_kernels)
+
+
+def delta_slab_pad(keys, weights, valid, cap: int, m_quantum: int = 1):
+    """Pad a flattened delta (m slabs x cap slots) with inert slots (key -1,
+    weight 0, invalid) so the slab count reaches the next power-of-two
+    multiple of ``m_quantum`` — incremental merges with 1, 2, 3.. dirty
+    shards then share O(log m) compiled executables instead of one per m."""
+    m = -(-keys.shape[0] // cap)
+    mq = max(m_quantum, 1)
+    while mq < m:
+        mq *= 2
+    pad = mq * cap - keys.shape[0]
+    if pad:
+        keys = jnp.concatenate([keys, jnp.full((pad,), -1, jnp.int32)])
+        weights = jnp.concatenate([weights, jnp.zeros((pad,), jnp.float32)])
+        valid = jnp.concatenate([valid, jnp.zeros((pad,), bool)])
+    return keys, weights, valid
+
+
+def multisketch_absorb_into(state: MultiSketch, delta: MultiSketch, *,
+                            spec: MultiSketchSpec,
+                            use_kernels: Optional[bool] = None,
+                            pad_deltas: bool = True) -> MultiSketch:
+    """Delta-aware incremental merge: state <- state ∪ delta, IN PLACE.
+
+    ``state`` is an already-merged slab (e.g. a query engine's cached
+    merged slab) whose buffers are DONATED — the result reuses its memory,
+    and the old handle must not be used again. ``delta`` is one sketch or a
+    stacked batch (leaves [m, c]) of sketches under the same spec — the
+    dirty shards of an absorb epoch; its buffers are NOT donated (shard
+    slabs stay resident).
+
+    Exactness (core.merge docstring): ``state`` summarizes the union data
+    set U and each delta slab summarizes some D_i, so re-selection over the
+    concatenated retained keys reproduces the sketch of U ∪ (∪ D_i) —
+    bit-identical to a full re-merge over ALL shards whenever U covers
+    every non-dirty shard's data, i.e. after any sequence of absorbs
+    (monotone additions). Replacing a shard's content wholesale
+    (``set_shard``/``load_stacked``) voids that containment; callers must
+    take the full-merge path there.
+
+    ``use_kernels=None`` resolves to the backend default — the fused
+    kernel chain on a real accelerator, the bit-compatible XLA selection
+    when kernels would run under the Pallas interpreter (slab-scale
+    rebuilds are latency-bound; the interpreted chain is ~15x slower than
+    its XLA twin while producing identical bits).
+    """
+    return multisketch_absorb_slabs(state, delta.keys, delta.weights,
+                                    delta.valid, spec=spec,
+                                    use_kernels=use_kernels,
+                                    pad_deltas=pad_deltas)
+
+
+def multisketch_absorb_slabs(state: MultiSketch, delta_keys, delta_weights,
+                             delta_valid, *, spec: MultiSketchSpec,
+                             use_kernels: Optional[bool] = None,
+                             pad_deltas: bool = True) -> MultiSketch:
+    """`multisketch_absorb_into` taking the delta's three CONSUMED leaves
+    directly ([c] or [m, c]) — re-selection recomputes probs/seeds/taus,
+    so callers holding whole sketches (the engine's dirty shards) need
+    not stack the other five leaves just to have them discarded."""
+    if use_kernels is None:
+        from repro.kernels._util import default_interpret
+        use_kernels = not default_interpret()
+    # the hot path (one dirty shard, resident slab leaves) must not pay
+    # per-op dispatch: reshape/convert only when the delta is stacked or
+    # host-side, and padding is a no-op at an exact power-of-two count
+    dk, dw, dv = delta_keys, delta_weights, delta_valid
+    if getattr(dk, "ndim", None) != 1:
+        dk = jnp.asarray(dk, jnp.int32).reshape(-1)
+        dw = jnp.asarray(dw, jnp.float32).reshape(-1)
+        dv = jnp.asarray(dv, bool).reshape(-1)
+    if pad_deltas and dk.shape[0] != spec.cap:
+        dk, dw, dv = delta_slab_pad(dk, dw, dv, spec.cap)
+    return _absorb_into_jit(state.keys, state.weights, state.probs,
+                            state.seeds, state.member, state.aux,
+                            state.valid, state.taus, dk, dw, dv,
+                            spec=spec, use_kernels=use_kernels)
+
+
 @partial(jax.jit, static_argnames=("spec", "use_kernels"))
 def _merge_jit(a, b, *, spec, use_kernels):
     return _rebuild(spec,
@@ -469,13 +562,20 @@ def multisketch_query_many(sk: MultiSketch, fs, predicates,
     """Host-facing batched query: encode predicates, pad B up to a
     ``b_quantum`` bucket (with never-matching rows, so same-bucket batches
     share one compiled executable), run the fused estimate, slice back.
-    Returns float numpy [|F|, B]."""
+    Returns float numpy [|F|, B].
+
+    B == 1 skips the bucketing and runs the one-row table directly — a
+    single query is its own jit-cache bucket (one fixed shape, so traces
+    stay bounded) and must not pay a ``b_quantum``-wide estimate; this is
+    the single-query fast path every engine ``query`` routes through."""
     import numpy as np
 
     from .predicates import encode_predicates, pad_table
     table = encode_predicates(predicates)
     b = table.shape[0]
-    bpad = max(b_quantum, -(-b // b_quantum) * b_quantum)
+    # exactly B == 1: an empty (B=0) table still takes the bucketed path,
+    # which degrades to a padded all-never batch and an empty [:, :0] slice
+    bpad = 1 if b == 1 else max(b_quantum, -(-b // b_quantum) * b_quantum)
     out = multisketch_estimate_batch(sk, tuple(fs), pad_table(table, bpad),
                                      use_kernels=use_kernels)
     return np.asarray(out)[:, :b]

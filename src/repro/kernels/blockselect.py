@@ -64,7 +64,10 @@ def batched_block_bottomk(seeds, k: int, interpret=None):
     """
     interpret = resolve_interpret(interpret)
     nf, n = seeds.shape
-    b = min(BLOCK, n)
+    # lane-aligned block fit: delta-slab inputs (an incremental merge's
+    # (1 + dirty) x capacity retained slots) are far below the streaming
+    # BLOCK — round the block to the 128-lane quantum, not up to BLOCK
+    b = min(BLOCK, round_up(n, 128))
     npad = round_up(n, b)
     s = pad_tail(seeds.astype(jnp.float32), npad, _INF)
     nb = npad // b

@@ -60,7 +60,12 @@ def retention_priority(sorted_keys, weights, member, keep, interpret=None):
     """
     interpret = resolve_interpret(interpret)
     n = sorted_keys.shape[0]
-    npad = round_up(max(n, 1), BLOCK)
+    # delta-slab sizing: incremental merges re-select over a few hundred
+    # retained slots ((1 + dirty) x capacity), not a streaming batch — fit
+    # the block to the input (lane-aligned) instead of padding every call
+    # to the full streaming BLOCK
+    b = min(BLOCK, round_up(max(n, 1), 128))
+    npad = round_up(max(n, 1), b)
     sk = pad_tail(sorted_keys.astype(jnp.int32), npad, -1)
     prev = jnp.concatenate([jnp.full((1,), -2, jnp.int32), sk[:-1]])
     w = pad_tail(weights.astype(jnp.float32), npad, 0.0)
@@ -68,9 +73,9 @@ def retention_priority(sorted_keys, weights, member, keep, interpret=None):
     kp = pad_tail(keep.astype(jnp.int32), npad, 0)
     out = pl.pallas_call(
         _priority_kernel,
-        grid=(npad // BLOCK,),
-        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))] * 5,
-        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        grid=(npad // b,),
+        in_specs=[pl.BlockSpec((b,), lambda i: (i,))] * 5,
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((npad,), jnp.float32),
         interpret=interpret,
     )(sk, prev, mem, kp, w)

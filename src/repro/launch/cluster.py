@@ -49,16 +49,46 @@ from repro.core.multi_sketch import (MultiSketchSpec, multisketch_absorb,
                                      multisketch_empty, pad_chunk)
 
 
+def _sorted_lookup(cand_keys, cand_coords, queries):
+    """(hit [n] bool, rows [n, dim]) — each query key's coords among the
+    candidate (key, coord) rows; the shared sort+searchsorted+gather core
+    of every realignment path. Negative query keys never hit."""
+    order = jnp.argsort(cand_keys)
+    sk = cand_keys[order]
+    sc = cand_coords[order]
+    pos = jnp.clip(jnp.searchsorted(sk, queries), 0, sk.shape[0] - 1)
+    hit = (sk[pos] == queries) & (queries >= 0)
+    return hit, sc[pos]
+
+
 @jax.jit
 def _align_coords(new_keys, cand_keys, cand_coords):
     """coords for each slab slot, looked up among candidate (key, coord)
     rows — the device-side realignment after a donated fold."""
-    order = jnp.argsort(cand_keys)
-    sk = cand_keys[order]
-    sc = cand_coords[order]
-    pos = jnp.clip(jnp.searchsorted(sk, new_keys), 0, sk.shape[0] - 1)
-    hit = (sk[pos] == new_keys) & (new_keys >= 0)
-    return jnp.where(hit[:, None], sc[pos], 0.0)
+    hit, rows = _sorted_lookup(cand_keys, cand_coords, new_keys)
+    return jnp.where(hit[:, None], rows, 0.0)
+
+
+@jax.jit
+def _align_coords_delta(new_keys, old_keys, old_coords, chunk_keys,
+                        chunk_coords):
+    """Delta-aware realignment (the coords twin of the incremental merged-
+    slab fold): a slot whose key did not move REUSES its coords row
+    directly; only MOVED slots (shifted by compaction or newly inserted
+    from the chunk) are re-gathered, and their lookup sorts the old slab
+    and the chunk separately ([cap] + [chunk] argsorts instead of one
+    [cap+chunk] argsort — the delta is usually much smaller than the
+    candidate union). Bit-identical to ``_align_coords`` over the
+    concatenated candidates: a re-absorbed key must present the same
+    coordinates (ClusterEngine.absorb contract), so source order is free.
+    """
+    same = (new_keys == old_keys) & (new_keys >= 0)
+    moved = jnp.where(same, -1, new_keys)    # unmoved slots skip the gather
+    ohit, orows = _sorted_lookup(old_keys, old_coords, moved)
+    chit, crows = _sorted_lookup(chunk_keys, chunk_coords, moved)
+    looked = jnp.where(ohit[:, None], orows,
+                       jnp.where(chit[:, None], crows, 0.0))
+    return jnp.where(same[:, None], old_coords, looked)
 
 
 class ClusterEngine:
@@ -149,10 +179,9 @@ class ClusterEngine:
         self._sketch = multisketch_absorb(self._sketch, keys, v, act,
                                           spec=self.spec,
                                           use_kernels=self.use_kernels)
-        self._coords = _align_coords(
-            self._sketch.keys,
-            jnp.concatenate([old_keys, jnp.asarray(keys, jnp.int32)]),
-            jnp.concatenate([old_coords, Ppad]))
+        self._coords = _align_coords_delta(
+            self._sketch.keys, old_keys, old_coords,
+            jnp.asarray(keys, jnp.int32), Ppad)
         self._epoch += 1
 
     def sample(self):

@@ -32,7 +32,9 @@ import numpy as np
 
 from repro.core.funcs import StatFn
 from repro.core.multi_sketch import (MultiSketch, MultiSketchSpec,
-                                     multisketch_absorb, multisketch_empty,
+                                     multisketch_absorb,
+                                     multisketch_absorb_slabs,
+                                     multisketch_empty,
                                      multisketch_merge_stacked,
                                      multisketch_query_many, pad_chunk)
 from repro.core.predicates import EVERYTHING, SegmentPredicate
@@ -54,17 +56,34 @@ class SegmentQueryEngine:
 
     def __init__(self, spec: MultiSketchSpec, shards: int = 1,
                  b_quantum: int = 16, chunk: int = 256,
-                 use_kernels: Optional[bool] = None):
+                 use_kernels: Optional[bool] = None,
+                 max_delta: Optional[int] = None):
         if shards < 1:
             raise ValueError(f"need >= 1 shard, got {shards}")
         self.spec = spec
         self.b_quantum = int(b_quantum)
         self.chunk = int(chunk)
         self.use_kernels = use_kernels
+        # incremental-merge eligibility ceiling: fold at most this many
+        # dirty shards into the cached merged slab before a full re-merge
+        # is the cheaper rebuild (None -> any strict subset of the shards)
+        self.max_delta = max_delta
         self._shards = [multisketch_empty(spec) for _ in range(shards)]
         self._epoch = 0            # bumped by every state mutation
         self._merged: Optional[MultiSketch] = None
         self._merged_epoch = -1    # epoch the cached merged slab reflects
+        # -- dirty-epoch tracking (the incremental-merge contract) --------
+        # _shard_epochs[i]: epoch of shard i's last mutation; _merged_base:
+        # snapshot of _shard_epochs the cached merged slab reflects (None
+        # after a non-monotone mutation — set_shard/load_stacked replace
+        # data, so the cached merge no longer covers the residents and the
+        # delta fold would be inexact; only a full re-merge recovers).
+        self._shard_epochs = [0] * shards
+        self._merged_base: Optional[list] = None
+        self._merged_handed_out = False   # `merged` property gave out refs
+        # full / incremental / hit counts — the launch-accounting record
+        # (tests pin "incremental epoch => delta fold only, no full merge")
+        self.merge_stats = {"full": 0, "incremental": 0, "hit": 0}
 
     # -- resident state ----------------------------------------------------
     @property
@@ -89,30 +108,49 @@ class SegmentQueryEngine:
             self._shards[shard], keys, weights, active, spec=self.spec,
             use_kernels=self.use_kernels)
         self._epoch += 1
+        self._shard_epochs[shard] = self._epoch
 
     def set_shard(self, shard: int, sketch: MultiSketch):
         """Install a prebuilt slab (a collector's state, a checkpointed
         sketch, a slab wired from another job) as one shard's residency.
         The slab is COPIED in: a later absorb on this shard donates the
-        resident buffers, and the caller's handle must stay valid."""
+        resident buffers, and the caller's handle must stay valid.
+
+        Replacing a shard's content is NON-MONOTONE (the old contribution
+        may vanish), so the cached merged slab is dropped entirely — the
+        next query takes the full re-merge path, never the delta fold."""
         self._shards[shard] = jax.tree.map(jnp.copy, sketch)
         self._epoch += 1
+        self._shard_epochs[shard] = self._epoch
+        self._drop_merged_cache()
 
     def add_shard(self, sketch: MultiSketch):
         """Append a prebuilt slab as a NEW shard (copied in, like
         ``set_shard``) — cross-job fan-in: slabs restored from another
-        job's checkpoint merge lazily with the resident state."""
+        job's checkpoint merge lazily with the resident state. A new shard
+        only ADDS data, so it rides the incremental path: the next query
+        folds just the new slab into the cached merge."""
         self._shards.append(jax.tree.map(jnp.copy, sketch))
         self._epoch += 1
+        self._shard_epochs.append(self._epoch)
 
     def load_stacked(self, stacked: MultiSketch):
         """Adopt a stacked batch of per-shard slabs (leaves [m, ...], e.g.
         from ``launch.summary.sharded_multisketch_shards``) as the resident
-        state — the merge stays lazy until the first query."""
+        state — the merge stays lazy until the first query. Wholesale
+        replacement: the merged-slab cache is dropped (full path next)."""
         m = stacked.keys.shape[0]
         self._shards = [jax.tree.map(lambda x, i=i: x[i], stacked)
                         for i in range(m)]
         self._epoch += 1
+        self._shard_epochs = [self._epoch] * m
+        self._drop_merged_cache()
+
+    def _drop_merged_cache(self):
+        self._merged = None
+        self._merged_epoch = -1
+        self._merged_base = None
+        self._merged_handed_out = False
 
     @classmethod
     def from_sharded(cls, spec: MultiSketchSpec, mesh, keys, weights,
@@ -149,7 +187,8 @@ class SegmentQueryEngine:
                  extra_meta={"multisketch_spec": spec_to_meta(self.spec),
                              "num_shards": len(self._shards),
                              "b_quantum": self.b_quantum,
-                             "chunk": self.chunk})
+                             "chunk": self.chunk,
+                             "max_delta": self.max_delta})
         return mgr
 
     @classmethod
@@ -178,33 +217,95 @@ class SegmentQueryEngine:
             state = mgr.restore_step(step, template)
             if state is None:
                 continue
+            md = ex.get("max_delta")
             eng = cls(spec, shards=num_shards,
                       b_quantum=int(ex.get("b_quantum", 16)),
                       chunk=int(ex.get("chunk", 256)),
-                      use_kernels=use_kernels)
+                      use_kernels=use_kernels,
+                      max_delta=None if md is None else int(md))
             eng._shards = [MultiSketch(*(jnp.asarray(x) for x in s))
                            for s in state["shards"]]
             eng._epoch += 1
+            eng._shard_epochs = [eng._epoch] * num_shards
             return eng
         raise FileNotFoundError(
             f"no intact checkpoint restorable under {directory}")
 
     # -- lazy merge-on-demand ----------------------------------------------
+    def _dirty_shards(self) -> Optional[list]:
+        """Shard indices mutated since the cached merge, or None when the
+        cache can't seed an incremental fold (no cache / non-monotone
+        history / truncating capacity, where delta != full bit-for-bit)."""
+        if (self._merged is None or self._merged_base is None
+                or self.spec.cap < self.spec.default_capacity()):
+            return None
+        base = self._merged_base
+        return [i for i in range(len(self._shards))
+                if i >= len(base) or self._shard_epochs[i] > base[i]]
+
+    def _incremental_eligible(self, dirty: Optional[list]) -> bool:
+        if dirty is None or not dirty:
+            return False
+        limit = (len(self._shards) - 1 if self.max_delta is None
+                 else self.max_delta)
+        return len(dirty) <= max(limit, 0)
+
+    def _materialize_merged(self) -> MultiSketch:
+        """The merged slab, maintained at most once per epoch: a cache hit,
+        an INCREMENTAL delta fold (absorb the dirty shards' slabs into the
+        cached merged slab — donated buffers, exact by threshold closure,
+        bit-identical to the full path), or the full stacked re-merge."""
+        if self._merged_epoch == self._epoch:
+            self.merge_stats["hit"] += 1
+            return self._merged
+        dirty = self._dirty_shards()
+        if self._incremental_eligible(dirty):
+            merged = self._merged
+            if self._merged_handed_out or any(
+                    merged is s for s in self._shards):
+                # the cached slab is visible outside the engine (a caller
+                # handle, or the single-shard alias of a live shard) — the
+                # delta fold donates its buffers, so re-point at fresh ones
+                merged = jax.tree.map(jnp.copy, merged)
+                self._merged_handed_out = False
+            if len(dirty) == 1:
+                d = self._shards[dirty[0]]
+                dk, dw, dv = d.keys, d.weights, d.valid
+            else:
+                # stack only the three leaves the delta fold consumes —
+                # probs/seeds/member/aux/taus are recomputed by the
+                # re-selection and would be copied just to be discarded
+                dk = jnp.stack([self._shards[i].keys for i in dirty])
+                dw = jnp.stack([self._shards[i].weights for i in dirty])
+                dv = jnp.stack([self._shards[i].valid for i in dirty])
+            self._merged = multisketch_absorb_slabs(
+                merged, dk, dw, dv, spec=self.spec,
+                use_kernels=self.use_kernels)
+            self.merge_stats["incremental"] += 1
+        elif len(self._shards) == 1:
+            self._merged = self._shards[0]
+            self.merge_stats["full"] += 1
+        else:
+            stacked = MultiSketch(*jax.tree.map(
+                lambda *xs: jnp.stack(xs), *self._shards))
+            self._merged = _merge_stacked_jit(
+                stacked, spec=self.spec,
+                use_kernels=(True if self.use_kernels is None
+                             else self.use_kernels))
+            self.merge_stats["full"] += 1
+        self._merged_epoch = self._epoch
+        self._merged_base = list(self._shard_epochs)
+        return self._merged
+
     @property
     def merged(self) -> MultiSketch:
-        """The merged slab, materialized at most once per epoch."""
-        if self._merged_epoch != self._epoch:
-            if len(self._shards) == 1:
-                self._merged = self._shards[0]
-            else:
-                stacked = MultiSketch(*jax.tree.map(
-                    lambda *xs: jnp.stack(xs), *self._shards))
-                self._merged = _merge_stacked_jit(
-                    stacked, spec=self.spec,
-                    use_kernels=(True if self.use_kernels is None
-                                 else self.use_kernels))
-            self._merged_epoch = self._epoch
-        return self._merged
+        """The merged slab, materialized at most once per epoch. The handle
+        stays valid across later updates: the next incremental fold donates
+        only engine-owned buffers (a handed-out slab is re-pointed first,
+        same discipline as ``absorb`` on the single-shard alias)."""
+        sk = self._materialize_merged()
+        self._merged_handed_out = True
+        return sk
 
     # -- queries -----------------------------------------------------------
     def query_many(self, fs: Optional[Sequence[StatFn]] = None,
@@ -217,8 +318,10 @@ class SegmentQueryEngine:
         """
         fs = (tuple(f for f, _ in self.spec.objectives) if fs is None
               else tuple(fs))
-        return multisketch_query_many(self.merged, fs, predicates,
-                                      b_quantum=self.b_quantum,
+        # internal access: queries read the slab without marking it handed
+        # out, so the next delta fold may still donate its buffers
+        return multisketch_query_many(self._materialize_merged(), fs,
+                                      predicates, b_quantum=self.b_quantum,
                                       use_kernels=self.use_kernels)
 
     def query(self, f: StatFn, predicate: SegmentPredicate = EVERYTHING

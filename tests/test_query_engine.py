@@ -316,6 +316,40 @@ def test_merge_sketches_jit_cached_and_donatable():
     np.testing.assert_array_equal(np.asarray(m0.probs), np.asarray(m2.probs))
 
 
+def test_query_many_B1_single_query_fast_path(monkeypatch):
+    """Satellite regression pin (bench_query_engine_B1_F1 showed 0.5x):
+    a B=1 query must run a ONE-row table — the same work unit as the
+    one-query-at-a-time loop, sharing its jit-cached executable — while
+    B in (1, b_quantum] still pads to the bucket."""
+    import repro.core.multi_sketch as MS
+    spec = C.MultiSketchSpec(objectives=_objectives(2), seed=15)
+    eng = SegmentQueryEngine(spec)
+    eng.absorb(np.arange(400), np.ones(400, np.float32))
+    widths = []
+    real = MS.multisketch_estimate_batch
+
+    def spy(sk, fs, table, use_kernels=None):
+        widths.append(np.asarray(table).shape[0])
+        return real(sk, fs, table, use_kernels=use_kernels)
+
+    monkeypatch.setattr(MS, "multisketch_estimate_batch", spy)
+    single = eng.query(C.SUM, C.key_range(0, 199))
+    assert widths[-1] == 1, "B=1 padded to a wider bucket"
+    out5 = eng.query_many((C.SUM,), _predicates(5))
+    assert widths[-1] == eng.b_quantum, "B in (1, quantum] must bucket"
+    # same executable as the loop path's 1-predicate estimate: no retrace
+    misses = MS._estimate_batch_jit._cache_size()
+    loop = float(np.asarray(real(eng.merged, (C.SUM,),
+                                 (C.key_range(0, 199),)))[0, 0])
+    assert MS._estimate_batch_jit._cache_size() == misses
+    assert abs(single - loop) <= 1e-5 * max(1.0, abs(loop))
+    assert out5.shape == (1, 5)
+    # B=0 (pre-encoded empty table) still buckets and returns empty
+    out0 = eng.query_many((C.SUM,), np.zeros((0, PRED_COLS), np.int32))
+    assert out0.shape == (1, 0)
+    assert widths[-1] == eng.b_quantum
+
+
 def test_collector_routes_queries_through_batched_path():
     from repro.telemetry.stats import StatsCollector, TelemetryConfig
     rng = np.random.default_rng(0)
