@@ -487,6 +487,92 @@ def bench_multiobj_scaling():
                 f"loop_x={us_l/base_loop:.2f}")
 
 
+def bench_serving_chaos(smoke: bool = False):
+    """Robustness PR tentpole: the multi-tenant ``EnginePool`` under
+    open-loop Poisson load WHILE a seeded fault schedule fires on the
+    fold and query paths (device faults -> retry -> breaker -> last-good
+    stale serving) and occasional producers ship NaN rows (quarantine).
+    Latency is measured from the SCHEDULED arrival (queueing under
+    overload is charged to the server). Reports p50/p95/p99 ms and
+    availability = (FRESH + STALE) / total — the acceptance gate asserts
+    availability >= 0.99 with every degraded answer labeled."""
+    from repro.launch.pool import (FRESH, REJECTED, STALE, EnginePool,
+                                   RejectedError)
+    from tests.faults import FaultInjector, poisson_arrivals
+
+    n_req = 100 if smoke else 400
+    # smoke runs on CPU interpret-mode kernels: keep the offered load
+    # below saturation so the percentiles measure the pool, not an
+    # unpayable backlog
+    rate_hz = 20.0 if smoke else 150.0
+    rng = np.random.default_rng(20)
+    # retries=0: each injected fault costs one op, so breakers actually
+    # open under the 0.25 schedule (3 consecutive) and the bench walks
+    # the whole ladder, not just the retry rung
+    pool = EnginePool(queue_depth=256, retries=0, breaker_threshold=3,
+                      breaker_reset=0.02, sleep=lambda s: None)
+    # small per-objective k: the bench measures the POOL (admission,
+    # ladder, breaker, quarantine), not kernel throughput — the query/
+    # absorb benches above own that axis
+    kk = 16 if smoke else 64
+    spec = C.MultiSketchSpec(objectives=((C.SUM, kk), (C.COUNT, kk),
+                                         (C.thresh(2.0), kk)), seed=0)
+    fs = tuple(f for f, _ in spec.objectives)
+    tenants = ("tenant_a", "tenant_b", "tenant_c")
+    warm_n = 256 if smoke else 2048
+    for i, name in enumerate(tenants):
+        pool.create_stream(name, spec)
+        keys = (i * 100_000 + np.arange(warm_n)).astype(np.int32)
+        pool.absorb(name, keys,
+                    rng.lognormal(0, 1.5, warm_n).astype(np.float32))
+        pool.query(name, fs)            # warm the per-tenant executables
+
+    arrivals = poisson_arrivals(rate_hz, n_req, rng)
+    statuses = {FRESH: 0, STALE: 0, REJECTED: 0}
+    lat_ms = []
+    quarantined = 0
+    t0 = time.perf_counter()
+    with FaultInjector(seed=21) as inj:
+        inj.fail_prob("query_merge", 0.25)
+        inj.fail_prob("absorb_fold", 0.25)
+        for i in range(n_req):
+            sched = t0 + float(arrivals[i])
+            while True:                 # open-loop: hold to the schedule
+                gap = sched - time.perf_counter()
+                if gap <= 0:
+                    break
+                time.sleep(min(gap, 1e-3))
+            name = tenants[int(rng.integers(0, len(tenants)))]
+            if i % 8 == 7:              # interleaved ingest under load
+                keys = (500_000 + i * 64 + np.arange(64)).astype(np.int32)
+                w = rng.lognormal(0, 1, 64).astype(np.float32)
+                if i % 16 == 15:
+                    w[::11] = np.nan    # corrupt producer rows
+                try:
+                    quarantined += pool.absorb(name, keys, w).quarantined
+                except RejectedError:
+                    pass
+            try:
+                fut = pool.submit(name, fs, timeout=2.0)
+            except RejectedError:       # admission shed counts against us
+                statuses[REJECTED] += 1
+                continue
+            pool.pump()
+            resp = fut.result(5.0)
+            statuses[resp.status] += 1
+            lat_ms.append((time.perf_counter() - sched) * 1e3)
+    lat = np.asarray(lat_ms)
+    opens = sum(pool.stats(t)["breaker_opens"] for t in tenants)
+    avail = (statuses[FRESH] + statuses[STALE]) / n_req
+    _record("serving_chaos", float(np.percentile(lat, 95)) * 1e3,
+            f"availability={avail:.4f};p50_ms={np.percentile(lat, 50):.2f};"
+            f"p95_ms={np.percentile(lat, 95):.2f};"
+            f"p99_ms={np.percentile(lat, 99):.2f};fresh={statuses[FRESH]};"
+            f"stale={statuses[STALE]};rejected={statuses[REJECTED]};"
+            f"quarantined={quarantined};breaker_opens={opens};"
+            f"rate_hz={rate_hz:g};n={n_req}")
+
+
 def bench_dryrun_roofline_summary():
     """Ties to EXPERIMENTS.md §Roofline: summarize dry-run artifacts."""
     import glob
@@ -500,36 +586,63 @@ def bench_dryrun_roofline_summary():
         _record(f"dryrun_cells_{mesh}", 0.0, f"total={cells};ok_or_skipped={ok}")
 
 
+def _registry(smoke: bool):
+    """Bench registry: (name, thunk, runs_in_smoke). ``--only <name>``
+    selects one entry (running it even when the smoke subset skips it)."""
+    s = dict(smoke=smoke)
+    return (
+        ("example_2_1_pps_table", bench_example_2_1_pps_table, True),
+        ("example_3_1_multiobjective_size",
+         bench_example_3_1_multiobjective_size, True),
+        ("thm_5_1_universal_size", bench_thm_5_1_universal_size, False),
+        ("thm_6_1_capping_size", bench_thm_6_1_capping_size, False),
+        ("thm_3_1_estimation_cv", bench_thm_3_1_estimation_cv, False),
+        ("sampling_throughput", bench_sampling_throughput, False),
+        ("merge_throughput", bench_merge_throughput, True),
+        ("incremental_merge", partial(bench_incremental_merge, **s), True),
+        ("absorb_throughput", partial(bench_absorb_throughput, **s), True),
+        ("universal_scan", partial(bench_universal_scan, **s), True),
+        ("query_engine", partial(bench_query_engine, **s), True),
+        ("cluster_engine", partial(bench_cluster_engine, **s), True),
+        ("engine_tail_latency",
+         partial(bench_engine_tail_latency, **s), True),
+        ("serving_chaos", partial(bench_serving_chaos, **s), True),
+        ("gradient_compression", bench_gradient_compression, True),
+        ("multiobj_scaling", bench_multiobj_scaling, False),
+        ("dryrun_roofline_summary", bench_dryrun_roofline_summary, True),
+    )
+
+
 def main(argv=None) -> None:
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="reduced fast subset (CI): skips the scaling "
                          "sweeps, shrinks the absorb bench")
+    ap.add_argument("--only", default=None,
+                    help="run a single bench by registry name "
+                         "(e.g. serving_chaos)")
+    ap.add_argument("--out", default="BENCH_results.json",
+                    help="JSON results path")
     args = ap.parse_args(argv)
+    registry = _registry(args.smoke)
+    if args.only is not None:
+        names = {n for n, _, _ in registry}
+        if args.only not in names:
+            raise SystemExit(f"unknown bench {args.only!r}; "
+                             f"choose from {sorted(names)}")
     print("name,us_per_call,derived")
-    bench_example_2_1_pps_table()
-    bench_example_3_1_multiobjective_size()
-    if not args.smoke:
-        bench_thm_5_1_universal_size()
-        bench_thm_6_1_capping_size()
-        bench_thm_3_1_estimation_cv()
-        bench_sampling_throughput()
-    bench_merge_throughput()
-    bench_incremental_merge(smoke=args.smoke)
-    bench_absorb_throughput(smoke=args.smoke)
-    bench_universal_scan(smoke=args.smoke)
-    bench_query_engine(smoke=args.smoke)
-    bench_cluster_engine(smoke=args.smoke)
-    bench_engine_tail_latency(smoke=args.smoke)
-    bench_gradient_compression()
-    if not args.smoke:
-        bench_multiobj_scaling()
-    bench_dryrun_roofline_summary()
-    with open("BENCH_results.json", "w") as fh:
+    for name, fn, in_smoke in registry:
+        if args.only is not None:
+            if name != args.only:
+                continue
+        elif args.smoke and not in_smoke:
+            continue
+        fn()
+    with open(args.out, "w") as fh:
         json.dump({"us_per_call": RESULTS, "derived": DERIVED}, fh,
                   indent=1, sort_keys=True)
-    print(f"# wrote BENCH_results.json ({len(RESULTS)} entries)")
+    print(f"# wrote {args.out} ({len(RESULTS)} entries)")
 
 
 if __name__ == "__main__":

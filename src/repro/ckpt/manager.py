@@ -4,11 +4,15 @@ Design (per DESIGN.md §6):
   * mesh-agnostic: leaves are gathered to host and stored dense, so a job
     restarted on a DIFFERENT mesh (elastic re-scale, pod loss) re-shards on
     load via the new mesh's shardings;
-  * atomic: write to step_N.tmp/, fsync, os.replace -> step_N/ — a crash
-    mid-save never corrupts the latest checkpoint;
+  * atomic: write to step_N.tmp/, fsync EVERY file (arrays and meta.json)
+    plus the directories, os.replace -> step_N/ — a crash at any point,
+    including right after the rename, never persists a checkpoint whose
+    arrays did not hit disk;
   * integrity: per-array crc32 stored in meta.json and verified on restore;
     a corrupt checkpoint is skipped and the previous one restored;
-  * keep-last-k pruning + optional async (background thread) saves.
+  * keep-last-k pruning + optional async (background thread) saves, with a
+    manager-wide lock so an async save/prune can never race a concurrent
+    restore reading a step directory mid-delete.
 """
 from __future__ import annotations
 
@@ -40,6 +44,10 @@ class CheckpointManager:
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._thread = None
+        # serializes write/prune against restore reads (RLock: _write
+        # calls _prune while holding it) — an async save can otherwise
+        # delete a step directory out from under a concurrent restore
+        self._lock = threading.RLock()
 
     # ------------------------------------------------------------- save
     def save(self, step: int, state, blocking: bool = True,
@@ -67,34 +75,52 @@ class CheckpointManager:
             self._thread.join()
             self._thread = None
 
+    @staticmethod
+    def _fsync_dir(path: str):
+        fd = os.open(path, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+
     def _write(self, step: int, host: dict, extra_meta: dict | None = None):
-        final = os.path.join(self.dir, f"step_{step:010d}")
-        tmp = final + ".tmp"
-        if os.path.exists(tmp):
-            shutil.rmtree(tmp)
-        os.makedirs(tmp)
-        meta = {"step": step, "arrays": {}, "extra": extra_meta or {}}
-        for k, v in host.items():
-            fn = k.replace(_SEP, "__") + ".npy"
-            path = os.path.join(tmp, fn)
-            np.save(path, v)
-            meta["arrays"][k] = {
-                "file": fn, "crc": zlib.crc32(v.tobytes()) & 0xFFFFFFFF,
-                "shape": list(v.shape), "dtype": str(v.dtype)}
-        with open(os.path.join(tmp, "meta.json"), "w") as f:
-            json.dump(meta, f)
-            f.flush()
-            os.fsync(f.fileno())
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.replace(tmp, final)
-        self._prune()
+        with self._lock:
+            final = os.path.join(self.dir, f"step_{step:010d}")
+            tmp = final + ".tmp"
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            meta = {"step": step, "arrays": {}, "extra": extra_meta or {}}
+            for k, v in host.items():
+                fn = k.replace(_SEP, "__") + ".npy"
+                # fsync each array file: the rename below only orders the
+                # DIRECTORY entry — without these fsyncs a crash after
+                # os.replace can persist a checkpoint whose array bytes
+                # never hit disk (meta.json alone was never enough)
+                with open(os.path.join(tmp, fn), "wb") as f:
+                    np.save(f, v)
+                    f.flush()
+                    os.fsync(f.fileno())
+                meta["arrays"][k] = {
+                    "file": fn, "crc": zlib.crc32(v.tobytes()) & 0xFFFFFFFF,
+                    "shape": list(v.shape), "dtype": str(v.dtype)}
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+                f.flush()
+                os.fsync(f.fileno())
+            self._fsync_dir(tmp)       # file entries durable before rename
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            self._fsync_dir(self.dir)  # the rename itself durable
+            self._prune()
 
     def _prune(self):
-        steps = self.list_steps()
-        for s in steps[:-self.keep]:
-            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
-                          ignore_errors=True)
+        with self._lock:
+            steps = self.list_steps()
+            for s in steps[:-self.keep]:
+                shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                              ignore_errors=True)
 
     # ---------------------------------------------------------- restore
     def list_steps(self):
@@ -116,24 +142,26 @@ class CheckpointManager:
         steps = [step] if step is not None else reversed(self.list_steps())
         for s in steps:
             try:
-                with open(os.path.join(self.dir, f"step_{s:010d}",
-                                       "meta.json")) as f:
+                with self._lock, \
+                        open(os.path.join(self.dir, f"step_{s:010d}",
+                                          "meta.json")) as f:
                     return s, json.load(f)
             except (OSError, ValueError):   # missing OR corrupt json
                 continue
         raise FileNotFoundError(f"no readable checkpoint under {self.dir}")
 
     def _load(self, step: int):
-        d = os.path.join(self.dir, f"step_{step:010d}")
-        with open(os.path.join(d, "meta.json")) as f:
-            meta = json.load(f)
-        arrays = {}
-        for k, info in meta["arrays"].items():
-            v = np.load(os.path.join(d, info["file"]))
-            if (zlib.crc32(v.tobytes()) & 0xFFFFFFFF) != info["crc"]:
-                raise IOError(f"checksum mismatch for {k} at step {step}")
-            arrays[k] = v
-        return meta["step"], arrays
+        with self._lock:   # a concurrent save's prune must not delete the
+            d = os.path.join(self.dir, f"step_{step:010d}")  # dir mid-read
+            with open(os.path.join(d, "meta.json")) as f:
+                meta = json.load(f)
+            arrays = {}
+            for k, info in meta["arrays"].items():
+                v = np.load(os.path.join(d, info["file"]))
+                if (zlib.crc32(v.tobytes()) & 0xFFFFFFFF) != info["crc"]:
+                    raise IOError(f"checksum mismatch for {k} at step {step}")
+                arrays[k] = v
+            return meta["step"], arrays
 
     def restore_step(self, step: int, template, shardings=None):
         """Restore ONE specific step into ``template``'s structure, or None

@@ -111,6 +111,37 @@ staleness signal, mirroring the query engine — queries always read the
 live slab), and every estimate is the same HT sum as
 ``sketch_estimate`` with f_C(x) in place of f(w_x) — so per-objective CV
 guarantees carry over to every candidate center set the optimizer scores.
+
+SERVING-TIER FAILURE-SEMANTICS CONTRACT (launch.pool.EnginePool): the
+multi-tenant serving tier leans on the exactness invariants above to
+degrade WITHOUT becoming wrong. Its rules:
+
+  * degradation ladder — every response is labeled FRESH (live merged
+    slab, epoch_lag == 0), STALE (answered, but from the last-good merged
+    slab and/or with accepted-but-unfolded chunks; ``epoch_lag`` counts
+    exactly how many), or REJECTED (admission queue full, deadline
+    passed, or no last-good slab to fall back to). There is no fourth
+    state: an answer the pool cannot label is an answer it refuses.
+  * staleness is never wrongness — a stale merged slab is still an EXACT
+    multi-objective sketch of a PREFIX of the stream (merging exactness
+    above), so every HT estimate served from it is unbiased for that
+    prefix with the full Thm 3.1 per-objective CV guarantee; ``epoch_lag``
+    tells the caller which prefix. The ``overflow`` flag rides along so a
+    capacity-saturated (guarantee-voiding) slab is always visible.
+  * durability & replay exactness — ingest is WAL-appended (crc-framed,
+    fsync'd) BEFORE the device fold, and snapshots store the slabs plus
+    the applied WAL sequence. Crash recovery = restore newest intact
+    snapshot -> replay the WAL tail in sequence order -> BIT-IDENTICAL
+    slabs to the uncrashed engine: the fold is deterministic and absorb
+    order was fixed by the WAL, so this is the same streaming-exactness
+    argument as ``multisketch_absorb``. Corrupt snapshots fall back a
+    step (crc catch) and replay a longer tail; torn WAL tails drop only
+    the final, unacknowledged record.
+  * quarantine — non-finite/negative weights and out-of-range keys are
+    masked per ROW (inactive, key -1, weight 0) before the fold, which
+    makes them indistinguishable from ``pad_chunk`` padding: the slab is
+    bit-identical to one that absorbed only the clean rows, and the
+    quarantine count is surfaced per absorb receipt and per stream.
 """
 from __future__ import annotations
 

@@ -496,6 +496,37 @@ def pad_chunk(keys, weights, active=None, chunk: int = 256):
     return keys, weights, active
 
 
+def quarantine_chunk(keys, weights, active=None):
+    """Per-ROW input quarantine for absorb paths facing untrusted producers.
+
+    A malformed row — NaN/inf/negative weight, NaN/inf/negative or
+    out-of-int32-range key — is rejected individually (marked inactive,
+    weight zeroed, key set to -1) instead of poisoning or dropping the
+    whole chunk: the surviving rows fold exactly as if the producer had
+    never sent the bad ones (an inactive slot is indistinguishable from
+    ``pad_chunk`` padding, so the resulting slab is bit-identical to
+    absorbing only the clean rows at the same chunk quantum).
+
+    Returns ``(keys int32, weights float32, active bool, n_quarantined)``
+    where ``n_quarantined`` counts rows that were active on entry but
+    rejected here — the per-stream poison-producer health signal
+    (``EnginePool`` accumulates it per tenant).
+    """
+    import numpy as np
+    kf = np.asarray(keys).reshape(-1).astype(np.float64)
+    wf = np.asarray(weights).reshape(-1).astype(np.float64)
+    act = (np.ones(kf.shape, bool) if active is None
+           else np.asarray(active, bool).reshape(-1))
+    bad_w = ~np.isfinite(wf) | (wf < 0.0)
+    bad_k = (~np.isfinite(kf) | (kf < 0.0)
+             | (kf > float(np.iinfo(np.int32).max)))
+    bad = bad_w | bad_k
+    n_quarantined = int(np.count_nonzero(bad & act))
+    out_k = np.where(bad, -1.0, kf).astype(np.int32)
+    out_w = np.where(bad, 0.0, wf).astype(np.float32)
+    return out_k, out_w, act & ~bad, n_quarantined
+
+
 def statfn_to_meta(f: StatFn) -> dict:
     """JSON-able encoding of a StatFn (combo recurses)."""
     d = {"kind": f.kind, "param": float(f.param)}

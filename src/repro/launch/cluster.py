@@ -140,6 +140,15 @@ class ClusterEngine:
     def anchors(self):
         return self._anchor_coords
 
+    @property
+    def overflow(self) -> bool:
+        """Saturation health flag (mirrors SegmentQueryEngine.merge_stats
+        ['overflow']): True iff the resident slab is full, i.e. compaction
+        may have truncated the sample and cost-estimate cv silently
+        degrades — serving tiers should surface it per response."""
+        from repro.core.multi_sketch import multisketch_overflow
+        return bool(multisketch_overflow(self._sketch))
+
     def absorb(self, points, keys=None):
         """Fold a chunk of points into the resident slab (donated device
         fold + coords realignment). ``keys`` default to a running global

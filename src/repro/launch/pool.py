@@ -1,0 +1,588 @@
+"""Fault-tolerant multi-tenant serving tier: the EnginePool.
+
+Many named MultiSketch streams (tenants) behind ONE admission loop, each
+stream a resident ``SegmentQueryEngine`` wrapped in the failure machinery
+a million-user deployment needs. The design premise is the paper's:
+coordinated mergeable sketches make degraded-but-correct answers POSSIBLE
+— a stale merged slab is still an unbiased HT estimator with a known
+(slightly worse) cv — and the fixed-capacity wire format makes
+recovery-by-merge exact. So the pool promises "never wrong, occasionally
+stale" instead of "occasionally down":
+
+  * ADMISSION & BACKPRESSURE — a bounded request queue; ``submit`` raises
+    :class:`RejectedError` when it is full (load shedding, never unbounded
+    memory). ``pump`` drains the queue and COALESCES same-(stream,
+    objectives) requests into one fused B-bucket launch (the
+    ``multisketch_query_many`` quantum machinery), so burst traffic pays
+    one kernel launch per bucket, not one per request. Per-request
+    deadlines: a request already past its deadline at service time is
+    answered ``REJECTED`` (error "deadline"), never silently late.
+  * RETRY / TIMEOUT / BACKOFF — transient absorb/query failures (injected
+    device errors, donation races) are retried with exponential backoff +
+    jitter; persistent failure trips a per-stream circuit breaker.
+  * GRACEFUL DEGRADATION LADDER — ``FRESH`` -> ``STALE(epoch_lag)`` ->
+    ``REJECTED``. A stream whose breaker is open (or whose fresh query
+    path fails after retries) serves from its LAST-GOOD merged slab; a
+    failed delta fold leaves data durable in the WAL and downgrades
+    responses to ``STALE`` with the exact chunk lag. Every response
+    carries its staleness level and the ``multisketch_overflow`` flag —
+    degraded answers are still unbiased estimates, and they are LABELED.
+  * INPUT QUARANTINE — NaN/inf/negative rows are rejected PER ROW at
+    absorb (``core.multi_sketch.quarantine_chunk``) with a per-stream
+    counter: one bad producer cannot poison a tenant's slab.
+  * DURABILITY — per-stream WAL of absorbed chunks (``launch.wal``,
+    fsync'd write-ahead of the fold) + periodic ``CheckpointManager``
+    snapshots. Crash recovery = restore newest intact snapshot -> replay
+    the WAL tail -> lazy merge, BIT-IDENTICAL to the uncrashed engine
+    (asserted in tests/test_serving_faults.py).
+
+Fault-injection hooks: every failure-prone operation funnels through a
+named fault point (``_fault_point``); the chaos harness (tests/faults.py)
+installs deterministic failure schedules there without monkeypatching
+library internals. Production runs have zero hooks installed and pay one
+dict lookup per operation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import random
+import threading
+import time
+from collections import deque
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.funcs import StatFn
+from repro.core.multi_sketch import (MultiSketchSpec, multisketch_overflow,
+                                     multisketch_query_many,
+                                     quarantine_chunk, spec_from_meta,
+                                     spec_to_meta)
+from repro.core.predicates import EVERYTHING, encode_predicates
+from repro.launch.query import SegmentQueryEngine
+from repro.launch.wal import WriteAheadLog
+
+# degradation-ladder response statuses (the serving contract, core.merge)
+FRESH = "FRESH"
+STALE = "STALE"
+REJECTED = "REJECTED"
+
+
+class RejectedError(RuntimeError):
+    """Load shed: admission queue full / absorb backlog over its bound."""
+
+
+class TransientFault(RuntimeError):
+    """A retryable failure (injected device error, donation race)."""
+
+
+# -- fault-injection points (chaos harness contract) ------------------------
+# name -> hook(stream_name); an installed hook RAISES to inject a fault.
+_FAULT_HOOKS: Dict[str, Callable[[str], None]] = {}
+
+FAULT_POINTS = ("absorb_fold", "query_merge", "wal_append", "wal_replay",
+                "ckpt_save", "ckpt_restore")
+
+
+def install_fault_hook(point: str, fn: Callable[[str], None]):
+    if point not in FAULT_POINTS:
+        raise ValueError(f"unknown fault point {point!r}")
+    _FAULT_HOOKS[point] = fn
+
+
+def clear_fault_hooks():
+    _FAULT_HOOKS.clear()
+
+
+def _fault_point(point: str, stream: str):
+    fn = _FAULT_HOOKS.get(point)
+    if fn is not None:
+        fn(stream)
+
+
+# -- responses ---------------------------------------------------------------
+
+@dataclasses.dataclass
+class Response:
+    """One answered query. ``values`` is float [|F|, B] (None iff
+    REJECTED); ``epoch_lag`` counts accepted-but-unreflected absorb chunks
+    (0 iff the answer covers every ack'd chunk); ``overflow`` mirrors
+    ``multisketch_overflow`` of the slab that produced the answer."""
+
+    status: str
+    values: Optional[np.ndarray] = None
+    epoch_lag: int = 0
+    overflow: bool = False
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.status != REJECTED
+
+
+@dataclasses.dataclass
+class AbsorbReceipt:
+    """Ack for one absorb: rows accepted (durable once ``durable``),
+    rows quarantined, and whether the device fold already applied."""
+
+    accepted: int
+    quarantined: int
+    applied: bool
+    durable: bool
+    seq: int = 0
+
+
+class PoolFuture:
+    """Completion handle for a submitted query."""
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._response: Optional[Response] = None
+
+    def _set(self, response: Response):
+        self._response = response
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> Response:
+        if not self._event.wait(timeout):
+            raise TimeoutError("query not served within timeout")
+        return self._response
+
+
+@dataclasses.dataclass
+class _Request:
+    stream: str
+    fs: Tuple[StatFn, ...]
+    table: np.ndarray           # encoded predicate rows [b, PRED_COLS]
+    deadline: Optional[float]
+    future: PoolFuture
+
+
+class CircuitBreaker:
+    """Consecutive-failure breaker: closed -> open after ``threshold``
+    failures; open admits one half-open probe after ``reset_after``
+    seconds; a probe success closes it, a probe failure re-opens."""
+
+    def __init__(self, threshold: int = 3, reset_after: float = 1.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.threshold = int(threshold)
+        self.reset_after = float(reset_after)
+        self._clock = clock
+        self._failures = 0
+        self._opened_at: Optional[float] = None
+        self.open_count = 0     # times the breaker tripped (health metric)
+
+    @property
+    def is_open(self) -> bool:
+        return self._opened_at is not None
+
+    def allow(self) -> bool:
+        """May the protected operation be ATTEMPTED now? True when closed,
+        or when open long enough for a half-open probe."""
+        if self._opened_at is None:
+            return True
+        return self._clock() - self._opened_at >= self.reset_after
+
+    def record_success(self):
+        self._failures = 0
+        self._opened_at = None
+
+    def record_failure(self):
+        self._failures += 1
+        if self._failures >= self.threshold:
+            if self._opened_at is None:
+                self.open_count += 1
+            self._opened_at = self._clock()
+
+
+class _Stream:
+    """One tenant: engine + breaker + WAL + staleness bookkeeping."""
+
+    def __init__(self, name: str, engine: SegmentQueryEngine,
+                 breaker: CircuitBreaker, wal: Optional[WriteAheadLog],
+                 ckpt_dir: Optional[str]):
+        self.name = name
+        self.engine = engine
+        self.breaker = breaker
+        self.wal = wal
+        self.ckpt_dir = ckpt_dir
+        self.ingest_seq = 0       # chunks accepted (and WAL'd, if durable)
+        self.applied_seq = 0      # chunks folded into the engine
+        self.quarantined = 0      # malformed rows rejected per-row
+        self.snapshot_failures = 0
+        self.folds_since_snapshot = 0
+        self.snapshot_seqs: list = []      # applied_seq at each snapshot
+        # (applied_seq_at_capture, merged slab) — the degraded-read replica
+        self.last_good = None
+        # fold backlog: chunks ack'd (durable) but not yet applied —
+        # bounded; the WAL holds them too, this just avoids re-reading it
+        self.pending = deque()
+
+
+class EnginePool:
+    """Multi-tenant serving pool. See module docstring for the contract.
+
+    ``pump`` is the admission loop body: call it from your serving loop
+    (deterministic — what the tests and the chaos bench do) or let
+    ``start()`` run it on a background thread.
+    """
+
+    def __init__(self, queue_depth: int = 128, pending_limit: int = 64,
+                 retries: int = 3, backoff_base: float = 0.01,
+                 backoff_cap: float = 0.5, breaker_threshold: int = 3,
+                 breaker_reset: float = 1.0,
+                 durability_dir: Optional[str] = None,
+                 snapshot_every: int = 0, keep_snapshots: int = 3,
+                 seed: int = 0,
+                 clock: Callable[[], float] = time.monotonic,
+                 sleep: Callable[[float], None] = time.sleep):
+        if queue_depth < 1:
+            raise ValueError("queue_depth must be >= 1")
+        self.queue_depth = int(queue_depth)
+        self.pending_limit = int(pending_limit)
+        self.retries = int(retries)
+        self.backoff_base = float(backoff_base)
+        self.backoff_cap = float(backoff_cap)
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_reset = float(breaker_reset)
+        self.durability_dir = durability_dir
+        self.snapshot_every = int(snapshot_every)
+        self.keep_snapshots = max(int(keep_snapshots), 1)
+        self._rng = random.Random(seed)
+        self._clock = clock
+        self._sleep = sleep
+        self._streams: Dict[str, _Stream] = {}
+        self._queue: deque = deque()
+        self._lock = threading.Lock()
+        self._worker: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # -- stream lifecycle ----------------------------------------------------
+    def _stream_paths(self, name: str):
+        base = os.path.join(self.durability_dir, name)
+        return (os.path.join(base, "ckpt"), os.path.join(base, "wal.log"),
+                os.path.join(base, "stream.json"))
+
+    def create_stream(self, name: str, spec: MultiSketchSpec,
+                      shards: int = 1, **engine_kw) -> SegmentQueryEngine:
+        """Register a tenant stream. With a ``durability_dir``, the static
+        stream config is persisted (stream.json) so ``EnginePool.open``
+        can rebuild the engine even before its first snapshot."""
+        if name in self._streams:
+            raise ValueError(f"stream {name!r} already exists")
+        engine = SegmentQueryEngine(spec, shards=shards, **engine_kw)
+        wal = ckpt_dir = None
+        if self.durability_dir is not None:
+            ckpt_dir, wal_path, cfg_path = self._stream_paths(name)
+            os.makedirs(os.path.dirname(cfg_path), exist_ok=True)
+            with open(cfg_path, "w") as f:
+                json.dump({"multisketch_spec": spec_to_meta(spec),
+                           "shards": int(shards),
+                           "engine_kw": {k: v for k, v in engine_kw.items()
+                                         if k != "use_kernels"}}, f)
+                f.flush()
+                os.fsync(f.fileno())
+            wal = WriteAheadLog(wal_path)
+        self._streams[name] = _Stream(
+            name, engine,
+            CircuitBreaker(self.breaker_threshold, self.breaker_reset,
+                           self._clock),
+            wal, ckpt_dir)
+        return engine
+
+    @classmethod
+    def open(cls, durability_dir: str, **kw) -> "EnginePool":
+        """Recover a pool from its durability directory: every stream is
+        restored from its newest intact checkpoint (falling back across
+        corrupt steps), then its WAL tail replayed — bit-identical to the
+        uncrashed engines."""
+        pool = cls(durability_dir=durability_dir, **kw)
+        if os.path.isdir(durability_dir):
+            for name in sorted(os.listdir(durability_dir)):
+                if os.path.isfile(os.path.join(durability_dir, name,
+                                               "stream.json")):
+                    pool.restore_stream(name)
+        return pool
+
+    def restore_stream(self, name: str) -> SegmentQueryEngine:
+        """Restore one stream: checkpoint (if any) -> WAL-tail replay."""
+        if self.durability_dir is None:
+            raise ValueError("pool has no durability_dir")
+        ckpt_dir, wal_path, cfg_path = self._stream_paths(name)
+        with open(cfg_path) as f:
+            cfg = json.load(f)
+        spec = spec_from_meta(cfg["multisketch_spec"])
+        applied = 0
+        engine = None
+        _fault_point("ckpt_restore", name)
+        try:
+            engine, extra = SegmentQueryEngine.from_checkpoint(
+                ckpt_dir, return_meta=True)
+            applied = int(extra.get("pool_applied_seq", 0))
+        except FileNotFoundError:
+            pass                       # pre-first-snapshot: replay-only
+        if engine is None:
+            engine = SegmentQueryEngine(spec, shards=int(cfg["shards"]),
+                                        **cfg.get("engine_kw", {}))
+        wal = WriteAheadLog(wal_path)
+        st = _Stream(name, engine,
+                     CircuitBreaker(self.breaker_threshold,
+                                    self.breaker_reset, self._clock),
+                     wal, ckpt_dir)
+        _fault_point("wal_replay", name)
+        seq = applied
+        for rec in wal.replay(min_seq_exclusive=applied):
+            engine.absorb(rec.keys, rec.weights, rec.active,
+                          shard=rec.shard)
+            seq = rec.seq
+        st.ingest_seq = st.applied_seq = seq
+        self._streams[name] = st
+        return engine
+
+    def close(self):
+        self.stop()
+        for st in self._streams.values():
+            if st.wal is not None:
+                st.wal.close()
+
+    # -- ingest (absorb + quarantine + WAL + retry/breaker) ------------------
+    def absorb(self, name: str, keys, weights, shard: int = 0
+               ) -> AbsorbReceipt:
+        """Ingest one chunk into a tenant stream.
+
+        Order of operations is the durability contract: quarantine ->
+        WAL append (fsync) -> device fold with retries. A chunk whose fold
+        fails (breaker opens) is still DURABLE and still counted in
+        ``ingest_seq`` — queries degrade to ``STALE(epoch_lag)`` until the
+        backlog replays. Backlog past ``pending_limit`` sheds load with
+        :class:`RejectedError` (bounded memory, never silent loss: the
+        rejected chunk was not ack'd)."""
+        st = self._stream(name)
+        k, w, act, n_bad = quarantine_chunk(keys, weights)
+        st.quarantined += n_bad
+        accepted = int(np.count_nonzero(act))
+        if accepted == 0:
+            return AbsorbReceipt(0, n_bad, applied=True,
+                                 durable=st.wal is not None,
+                                 seq=st.ingest_seq)
+        if len(st.pending) >= self.pending_limit:
+            raise RejectedError(
+                f"stream {name!r} fold backlog full "
+                f"({len(st.pending)} chunks)")
+        seq = st.ingest_seq + 1
+        if st.wal is not None:
+            _fault_point("wal_append", name)
+            st.wal.append(seq, shard, k, w, act.astype(np.uint8))
+        st.ingest_seq = seq
+        st.pending.append((seq, int(shard), k, w, act))
+        applied = False
+        if st.breaker.allow():
+            applied = self._drain_pending(st)
+            if applied:
+                self._maybe_snapshot(st)
+        return AbsorbReceipt(accepted, n_bad, applied=applied,
+                             durable=st.wal is not None, seq=seq)
+
+    def _drain_pending(self, st: _Stream) -> bool:
+        """Fold the backlog in sequence order; True iff fully applied."""
+        while st.pending:
+            seq, shard, k, w, act = st.pending[0]
+            try:
+                self._with_retries(
+                    lambda: self._fold_one(st, shard, k, w, act), st.name)
+            except Exception:
+                st.breaker.record_failure()
+                return False
+            st.breaker.record_success()
+            st.pending.popleft()
+            st.applied_seq = seq
+            st.folds_since_snapshot += 1
+        return True
+
+    def _fold_one(self, st: _Stream, shard, k, w, act):
+        _fault_point("absorb_fold", st.name)
+        st.engine.absorb(k, w, act, shard=shard)
+
+    # -- durability snapshots ------------------------------------------------
+    def _maybe_snapshot(self, st: _Stream):
+        if (self.snapshot_every and st.ckpt_dir is not None
+                and st.folds_since_snapshot >= self.snapshot_every):
+            try:
+                self.snapshot(st.name)
+            except Exception:
+                st.snapshot_failures += 1   # WAL still covers everything
+
+    def snapshot(self, name: str):
+        """Checkpoint a stream's engine (atomic, crc'd) stamping the
+        applied sequence, then prune the WAL to records newer than the
+        oldest RETAINED snapshot (recovery from any kept step stays
+        possible)."""
+        st = self._stream(name)
+        if st.ckpt_dir is None:
+            raise ValueError(f"stream {name!r} is not durable")
+        _fault_point("ckpt_save", name)
+        st.engine.save_checkpoint(
+            st.ckpt_dir, extra_meta={"pool_applied_seq": st.applied_seq})
+        st.folds_since_snapshot = 0
+        st.snapshot_seqs.append(st.applied_seq)
+        if st.wal is not None and len(st.snapshot_seqs) >= self.keep_snapshots:
+            st.wal.prune(st.snapshot_seqs[-self.keep_snapshots])
+
+    # -- admission (submit / pump / query) -----------------------------------
+    def submit(self, name: str, fs: Optional[Sequence[StatFn]] = None,
+               predicates=EVERYTHING, timeout: Optional[float] = None
+               ) -> PoolFuture:
+        """Enqueue a segment-query batch; raises :class:`RejectedError`
+        when the admission queue is full (load shedding)."""
+        st = self._stream(name)
+        fs = (tuple(f for f, _ in st.engine.spec.objectives) if fs is None
+              else tuple(fs))
+        table = np.asarray(encode_predicates(predicates), np.int32)
+        fut = PoolFuture()
+        deadline = None if timeout is None else self._clock() + timeout
+        with self._lock:
+            if len(self._queue) >= self.queue_depth:
+                raise RejectedError(
+                    f"admission queue full ({self.queue_depth})")
+            self._queue.append(_Request(name, fs, table, deadline, fut))
+        return fut
+
+    def pump(self) -> int:
+        """Drain the admission queue once: drop expired requests
+        (REJECTED/"deadline"), coalesce the rest by (stream, objectives)
+        and serve each group as ONE fused B-bucket launch. Returns the
+        number of requests answered."""
+        with self._lock:
+            batch = list(self._queue)
+            self._queue.clear()
+        if not batch:
+            return 0
+        groups: Dict[Tuple[str, Tuple[StatFn, ...]], list] = {}
+        for r in batch:
+            if r.deadline is not None and self._clock() > r.deadline:
+                r.future._set(Response(REJECTED, error="deadline"))
+                continue
+            groups.setdefault((r.stream, r.fs), []).append(r)
+        served = len(batch)
+        for (name, fs), reqs in groups.items():
+            table = np.concatenate([r.table for r in reqs])
+            resp = self._serve_group(self._stream(name), fs, table)
+            col = 0
+            for r in reqs:
+                b = r.table.shape[0]
+                vals = (None if resp.values is None
+                        else resp.values[:, col:col + b])
+                col += b
+                r.future._set(dataclasses.replace(resp, values=vals))
+        return served
+
+    def query(self, name: str, fs: Optional[Sequence[StatFn]] = None,
+              predicates=EVERYTHING, timeout: Optional[float] = None
+              ) -> Response:
+        """Synchronous convenience: submit + pump + result. Use
+        submit/pump (or ``start()``) for real batched serving."""
+        fut = self.submit(name, fs, predicates, timeout)
+        self.pump()
+        return fut.result(timeout=None if timeout is None else timeout + 1.0)
+
+    # -- the degradation ladder ----------------------------------------------
+    def _serve_group(self, st: _Stream, fs, table) -> Response:
+        err = None
+        if st.breaker.allow():
+            try:
+                vals = self._with_retries(
+                    lambda: self._query_engine(st, fs, table), st.name)
+                st.breaker.record_success()
+                # refresh the degraded-read replica: the handed-out handle
+                # stays valid across later donated folds (engine contract)
+                st.last_good = (st.applied_seq, st.engine.merged)
+                lag = st.ingest_seq - st.applied_seq
+                return Response(FRESH if lag == 0 else STALE, vals,
+                                epoch_lag=lag,
+                                overflow=bool(
+                                    st.engine.merge_stats["overflow"]))
+            except Exception as e:
+                st.breaker.record_failure()
+                err = f"{type(e).__name__}: {e}"
+        # degraded: answer from the last-good merged slab — an older epoch
+        # of the SAME unbiased estimator (exact merge contract), labeled
+        if st.last_good is not None:
+            base_seq, slab = st.last_good
+            vals = multisketch_query_many(
+                slab, fs, table, b_quantum=st.engine.b_quantum,
+                use_kernels=st.engine.use_kernels)
+            return Response(STALE, vals,
+                            epoch_lag=st.ingest_seq - base_seq,
+                            overflow=bool(multisketch_overflow(slab)),
+                            error=err)
+        return Response(REJECTED, error=err or "breaker open, no last-good")
+
+    def _query_engine(self, st: _Stream, fs, table) -> np.ndarray:
+        _fault_point("query_merge", st.name)
+        return st.engine.query_many(fs, table)
+
+    def _with_retries(self, fn, stream: str):
+        """Exponential backoff + jitter around a failure-prone op."""
+        for attempt in range(self.retries + 1):
+            try:
+                return fn()
+            except RejectedError:
+                raise
+            except Exception:
+                if attempt == self.retries:
+                    raise
+                delay = min(self.backoff_cap,
+                            self.backoff_base * (2 ** attempt))
+                self._sleep(delay * (0.5 + self._rng.random()))
+
+    # -- background admission loop -------------------------------------------
+    def start(self, interval: float = 0.001):
+        """Run ``pump`` on a daemon thread until ``stop()``."""
+        if self._worker is not None:
+            return
+        self._stop.clear()
+
+        def loop():
+            while not self._stop.is_set():
+                if self.pump() == 0:
+                    self._stop.wait(interval)
+        self._worker = threading.Thread(target=loop, daemon=True)
+        self._worker.start()
+
+    def stop(self):
+        if self._worker is not None:
+            self._stop.set()
+            self._worker.join()
+            self._worker = None
+
+    # -- health --------------------------------------------------------------
+    def _stream(self, name: str) -> _Stream:
+        try:
+            return self._streams[name]
+        except KeyError:
+            raise KeyError(f"unknown stream {name!r}") from None
+
+    @property
+    def streams(self):
+        return tuple(self._streams)
+
+    def queue_len(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    def stats(self, name: str) -> dict:
+        """Health snapshot: staleness lag, quarantine count, breaker
+        state, snapshot failures, and the engine's merge/overflow stats."""
+        st = self._stream(name)
+        return {"ingest_seq": st.ingest_seq, "applied_seq": st.applied_seq,
+                "epoch_lag": st.ingest_seq - st.applied_seq,
+                "pending": len(st.pending), "quarantined": st.quarantined,
+                "breaker_open": st.breaker.is_open,
+                "breaker_opens": st.breaker.open_count,
+                "snapshot_failures": st.snapshot_failures,
+                "merge_stats": dict(st.engine.merge_stats)}

@@ -36,6 +36,7 @@ from repro.core.multi_sketch import (MultiSketch, MultiSketchSpec,
                                      multisketch_absorb_slabs,
                                      multisketch_empty,
                                      multisketch_merge_stacked,
+                                     multisketch_overflow,
                                      multisketch_query_many, pad_chunk)
 from repro.core.predicates import EVERYTHING, SegmentPredicate
 
@@ -83,7 +84,12 @@ class SegmentQueryEngine:
         self._merged_handed_out = False   # `merged` property gave out refs
         # full / incremental / hit counts — the launch-accounting record
         # (tests pin "incremental epoch => delta fold only, no full merge")
-        self.merge_stats = {"full": 0, "incremental": 0, "hit": 0}
+        # — plus the saturation health flag: ``overflow`` goes True when a
+        # materialized merged slab is FULL, i.e. compaction may have
+        # truncated S ∪ Z and the cv guarantee silently degrades; serving
+        # tiers surface it in every response (launch.pool)
+        self.merge_stats = {"full": 0, "incremental": 0, "hit": 0,
+                            "overflow": False}
 
     # -- resident state ----------------------------------------------------
     @property
@@ -167,7 +173,8 @@ class SegmentQueryEngine:
 
     # -- checkpointing -----------------------------------------------------
     def save_checkpoint(self, directory: str, step: Optional[int] = None,
-                        blocking: bool = True):
+                        blocking: bool = True,
+                        extra_meta: Optional[dict] = None):
         """Persist the resident per-shard slabs + the spec (as JSON extra
         metadata) through ckpt.manager — atomic, crc-checked, keep-last-k.
         The slabs are plain arrays, so the checkpoint is mesh- and
@@ -177,30 +184,40 @@ class SegmentQueryEngine:
         ``step`` defaults to one past the newest existing step — the
         manager treats an already-present step as saved and skips it, so
         re-saving an updated engine must mint a fresh step number.
+        ``extra_meta``: caller-owned JSON-able entries merged into the
+        stored metadata (e.g. the serving pool's applied WAL sequence) —
+        engine keys win on collision.
         """
         from repro.ckpt.manager import CheckpointManager
         from repro.core.multi_sketch import spec_to_meta
         mgr = CheckpointManager(directory)
         if step is None:
             step = max(mgr.list_steps(), default=-1) + 1
+        ex = dict(extra_meta or {})
+        ex.update({"multisketch_spec": spec_to_meta(self.spec),
+                   "num_shards": len(self._shards),
+                   "b_quantum": self.b_quantum,
+                   "chunk": self.chunk,
+                   "max_delta": self.max_delta})
         mgr.save(step, {"shards": list(self._shards)}, blocking=blocking,
-                 extra_meta={"multisketch_spec": spec_to_meta(self.spec),
-                             "num_shards": len(self._shards),
-                             "b_quantum": self.b_quantum,
-                             "chunk": self.chunk,
-                             "max_delta": self.max_delta})
+                 extra_meta=ex)
         return mgr
 
     @classmethod
     def from_checkpoint(cls, directory: str,
-                        use_kernels: Optional[bool] = None
-                        ) -> "SegmentQueryEngine":
+                        use_kernels: Optional[bool] = None,
+                        return_meta: bool = False):
         """Rebuild an engine from the newest intact checkpoint: the spec
         comes from the stored metadata, the per-shard slabs from the
         crc-verified arrays — BOTH from the SAME step, falling back step by
         step when one is corrupt (a newer save's spec must never be paired
         with an older save's slabs). Queries over the restored engine are
-        bit-identical to the saved one's (the slabs ARE the state)."""
+        bit-identical to the saved one's (the slabs ARE the state).
+
+        ``return_meta=True`` -> ``(engine, extra)`` where ``extra`` is the
+        restored step's OWN extra-metadata dict — callers recovering
+        stateful context (e.g. the pool's applied WAL sequence) need it
+        from the step actually restored, not the newest one written."""
         from repro.ckpt.manager import CheckpointManager
         from repro.core.multi_sketch import spec_from_meta
         mgr = CheckpointManager(directory)
@@ -227,7 +244,7 @@ class SegmentQueryEngine:
                            for s in state["shards"]]
             eng._epoch += 1
             eng._shard_epochs = [eng._epoch] * num_shards
-            return eng
+            return (eng, ex) if return_meta else eng
         raise FileNotFoundError(
             f"no intact checkpoint restorable under {directory}")
 
@@ -295,6 +312,7 @@ class SegmentQueryEngine:
             self.merge_stats["full"] += 1
         self._merged_epoch = self._epoch
         self._merged_base = list(self._shard_epochs)
+        self.merge_stats["overflow"] = bool(multisketch_overflow(self._merged))
         return self._merged
 
     @property

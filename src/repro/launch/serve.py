@@ -1,4 +1,4 @@
-"""Serving driver: prefill + batched decode with admission telemetry.
+"""Serving driver: prefill + batched decode behind the fault-tolerant pool.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
         --batch 4 --prompt-len 16 --gen 16
@@ -6,8 +6,10 @@
 Demonstrates the inference path the decode_* dry-run cells lower: a prompt
 batch is prefilled (building the KV/SSM cache), then tokens are decoded
 step-by-step with greedy sampling. Request-level statistics (prompt length,
-generated tokens) are absorbed into a universal sample so any monotone
-f-statistic over the request log is available with gold-standard CV.
+generated tokens) flow through the multi-tenant ``EnginePool``
+(launch.pool): admission-queued, quarantined per row, answered with the
+degradation ladder's staleness/overflow labels — the dashboard path a real
+deployment serves from, not a bare collector.
 """
 from __future__ import annotations
 
@@ -19,19 +21,29 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config, get_smoke_config, list_archs
-from repro.core import EVERYTHING, SUM, COUNT, hash_fraction, thresh
+from repro.core import (EVERYTHING, SUM, COUNT, MultiSketchSpec,
+                        hash_fraction, thresh)
 from repro.launch.mesh import make_host_mesh, mesh_context
+from repro.launch.pool import EnginePool
 from repro.models import model as Mod
-from repro.telemetry.stats import StatsCollector, TelemetryConfig
+
+
+def _positive_int(v: str) -> int:
+    i = int(v)
+    if i < 1:
+        raise argparse.ArgumentTypeError(f"must be >= 1, got {i}")
+    return i
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-1.5b", choices=list_archs())
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--batch", type=_positive_int, default=4)
+    ap.add_argument("--prompt-len", type=_positive_int, default=16)
+    ap.add_argument("--gen", type=_positive_int, default=16,
+                    help="tokens to generate (>= 1; 1 = prefill-only "
+                         "argmax, no decode steps)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -71,23 +83,33 @@ def main(argv=None):
         gen = jnp.stack(outs, 1)
 
         print(f"prefill {args.batch}x{args.prompt_len}: {t_prefill*1e3:.1f} ms")
-        print(f"decode {args.gen-1} steps: "
-              f"{t_decode*1e3/(args.gen-1):.1f} ms/token")
+        if args.gen > 1:   # gen==1 decodes zero steps: no per-token rate
+            print(f"decode {args.gen-1} steps: "
+                  f"{t_decode*1e3/(args.gen-1):.1f} ms/token")
+        else:
+            print("decode 0 steps (prefill-only argmax)")
         print("generated token ids (first row):",
               np.asarray(gen[0])[:12].tolist())
 
-        # request telemetry: device-resident MultiSketch fold over request
-        # sizes — a sharded server keeps this state resident and merges the
-        # fixed-size slabs across replicas (core.multi_sketch invariants).
-        # All dashboard statistics come back from ONE fused segment-query
-        # launch (batched objectives x predicates, kernels.segquery).
-        tel = StatsCollector(TelemetryConfig(
+        # request telemetry through the fault-tolerant serving tier: one
+        # named stream per tenant behind the pool's admission queue —
+        # ingest is per-row quarantined, the dashboard batch coalesces
+        # into ONE fused segment-query launch, and every answer carries
+        # its degradation-ladder label (FRESH/STALE) + overflow flag.
+        pool = EnginePool(queue_depth=64)
+        pool.create_stream("requests", MultiSketchSpec(
             objectives=((SUM, 64), (COUNT, 64), (thresh(16.0), 64))))
-        tel.absorb(np.arange(args.batch),
-                   np.full(args.batch, float(args.prompt_len + args.gen)))
-        stats = tel.query_many(
-            (SUM, COUNT, thresh(16.0)),
-            (EVERYTHING, hash_fraction(0.5, salt=1)))
+        receipt = pool.absorb(
+            "requests", np.arange(args.batch),
+            np.full(args.batch, float(args.prompt_len + args.gen)))
+        fut = pool.submit("requests", (SUM, COUNT, thresh(16.0)),
+                          (EVERYTHING, hash_fraction(0.5, salt=1)))
+        pool.pump()
+        resp = fut.result(timeout=30.0)
+        stats = resp.values
+        print(f"[pool] stream=requests status={resp.status} "
+              f"lag={resp.epoch_lag} overflow={resp.overflow} "
+              f"quarantined={receipt.quarantined}")
         print("[telemetry] est total tokens served:", float(stats[0, 0]))
         print("[telemetry] est requests:", float(stats[1, 0]))
         print("[telemetry] est requests >= 16 tokens:", float(stats[2, 0]))

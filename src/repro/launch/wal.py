@@ -1,0 +1,143 @@
+"""Per-stream write-ahead log for the serving tier (launch.pool).
+
+Durability layer under ``EnginePool``: every accepted absorb chunk is
+appended here — fsync'd, crc-framed — BEFORE the device fold runs, so a
+crash (or a fold failure behind an open circuit breaker) never loses
+ingested data. Recovery is restore-checkpoint -> replay the WAL tail
+(records with seq past the checkpoint's applied sequence) -> lazy merge;
+because the fold is deterministic and checkpoints store exact slab bits,
+the recovered engine is BIT-IDENTICAL to the uncrashed one (the
+serving-tier failure-semantics contract, core.merge docstring).
+
+Record framing (little-endian):
+
+  magic  4s   b"MOW1"
+  seq    u64  strictly increasing per stream (gaps allowed after pruning)
+  shard  i32  target engine shard
+  n      i32  row count
+  crc    u32  crc32 over (seq, shard, n, payload)
+  payload     keys int32[n] + weights float32[n] + active uint8[n]
+
+Replay stops at the first torn/corrupt frame (short read, bad magic, crc
+mismatch, non-increasing seq): a torn tail — the expected crash artifact —
+silently yields every complete record before it; mid-file corruption is
+treated the same way (conservative: the seq chain past it is suspect).
+"""
+from __future__ import annotations
+
+import os
+import struct
+import zlib
+from typing import Iterator, NamedTuple, Optional
+
+import numpy as np
+
+_MAGIC = b"MOW1"
+_HEADER = struct.Struct("<4sQiiI")
+_BODY = struct.Struct("<QiI")  # the crc-covered header fields (seq, shard, n)
+_MAX_ROWS = 1 << 24            # frame sanity bound (rejects garbage lengths)
+
+
+class WalRecord(NamedTuple):
+    seq: int
+    shard: int
+    keys: np.ndarray     # int32 [n]
+    weights: np.ndarray  # float32 [n]
+    active: np.ndarray   # bool [n]
+
+
+def _frame(seq: int, shard: int, keys, weights, active) -> bytes:
+    keys = np.ascontiguousarray(keys, np.int32)
+    weights = np.ascontiguousarray(weights, np.float32)
+    active = np.ascontiguousarray(active, np.uint8)
+    n = keys.shape[0]
+    payload = keys.tobytes() + weights.tobytes() + active.tobytes()
+    crc = zlib.crc32(_BODY.pack(seq, shard, n) + payload) & 0xFFFFFFFF
+    return _HEADER.pack(_MAGIC, seq, shard, n, crc) + payload
+
+
+class WriteAheadLog:
+    """Append-only fsync'd chunk log; one file per stream."""
+
+    def __init__(self, path: str, fsync: bool = True):
+        self.path = path
+        self.fsync = fsync
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        self._f = open(path, "ab")
+
+    # ------------------------------------------------------------- write
+    def append(self, seq: int, shard: int, keys, weights, active):
+        """Durably append one chunk record (fsync before returning — the
+        write-ahead guarantee: once ``absorb`` acks, the chunk survives a
+        crash even if its device fold never ran)."""
+        self._f.write(_frame(int(seq), int(shard), keys, weights, active))
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+
+    def prune(self, min_seq_exclusive: int):
+        """Atomically rewrite the log keeping records with
+        seq > ``min_seq_exclusive`` — called after a checkpoint snapshot so
+        the log stays O(data since the oldest RETAINED snapshot), never
+        O(stream lifetime)."""
+        keep = [r for r in self.replay() if r.seq > min_seq_exclusive]
+        tmp = self.path + ".tmp"
+        with open(tmp, "wb") as f:
+            for r in keep:
+                f.write(_frame(r.seq, r.shard, r.keys, r.weights, r.active))
+            f.flush()
+            os.fsync(f.fileno())
+        self._f.close()
+        os.replace(tmp, self.path)
+        d = os.path.dirname(self.path) or "."
+        fd = os.open(d, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+        self._f = open(self.path, "ab")
+
+    def close(self):
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+    # -------------------------------------------------------------- read
+    def replay(self, min_seq_exclusive: int = 0) -> Iterator[WalRecord]:
+        """Yield intact records in order, stopping at the first torn or
+        corrupt frame. Safe on a live log (reads a separate handle)."""
+        self._f.flush()
+        last_seq = 0
+        with open(self.path, "rb") as f:
+            while True:
+                head = f.read(_HEADER.size)
+                if len(head) < _HEADER.size:
+                    return                       # EOF or torn header
+                magic, seq, shard, n, crc = _HEADER.unpack(head)
+                if magic != _MAGIC or not (0 <= n <= _MAX_ROWS):
+                    return                       # corrupt frame
+                payload = f.read(9 * n)
+                if len(payload) < 9 * n:
+                    return                       # torn payload
+                if zlib.crc32(_BODY.pack(seq, shard, n) + payload) \
+                        & 0xFFFFFFFF != crc:
+                    return                       # bit rot / torn write
+                if seq <= last_seq:
+                    return                       # seq chain broken
+                last_seq = seq
+                if seq <= min_seq_exclusive:
+                    continue
+                keys = np.frombuffer(payload, np.int32, n, 0).copy()
+                weights = np.frombuffer(payload, np.float32, n, 4 * n).copy()
+                active = np.frombuffer(payload, np.uint8, n, 8 * n
+                                       ).astype(bool)
+                yield WalRecord(seq, shard, keys, weights, active)
+
+    def last_seq(self) -> int:
+        """Highest intact sequence number (0 when empty)."""
+        seq = 0
+        for r in self.replay():
+            seq = r.seq
+        return seq

@@ -22,6 +22,7 @@ Arbitrary-callable ``segment_fn`` queries keep the eager
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -29,8 +30,8 @@ import numpy as np
 
 from repro.core import (COUNT, SUM, MultiSketch, MultiSketchSpec,
                         multisketch_absorb, multisketch_empty,
-                        multisketch_merge, multisketch_query_many,
-                        sketch_estimate)
+                        multisketch_merge, multisketch_overflow,
+                        multisketch_query_many, sketch_estimate)
 from repro.core.multi_sketch import pad_chunk
 from repro.core.funcs import StatFn
 from repro.core.predicates import EVERYTHING, SegmentPredicate
@@ -68,6 +69,7 @@ class StatsCollector:
         self.cfg = cfg
         self.spec = cfg.spec()
         self.state: MultiSketch = multisketch_empty(self.spec)
+        self._overflow_warned = False
 
     # -- streaming fold ----------------------------------------------------
     def absorb(self, keys, weights):
@@ -102,7 +104,27 @@ class StatsCollector:
         """Q(f_i, H_b) for a whole query batch -> float [|F|, B]: ONE fused
         launch over the resident slab (kernels.segquery), B bucketed to
         bound retraces."""
+        self._warn_if_overflowed()
         return multisketch_query_many(self.state, fs, predicates)
+
+    @property
+    def overflow(self) -> bool:
+        """True iff the pool saturated — compaction may have truncated
+        S ∪ Z, silently degrading cv below the Thm 3.1 guarantee."""
+        return bool(multisketch_overflow(self.state))
+
+    def _warn_if_overflowed(self):
+        # checked at query time (one cheap device read per query batch,
+        # not one per absorb on the hot fold path); warns ONCE per
+        # collector — a saturated sketch used to degrade with no signal
+        if not self._overflow_warned and self.overflow:
+            self._overflow_warned = True
+            warnings.warn(
+                f"StatsCollector pool overflowed (capacity "
+                f"{self.spec.cap}): S ∪ Z may be truncated and estimate "
+                f"cv is no longer guaranteed — raise TelemetryConfig."
+                f"capacity or lower the per-objective k",
+                RuntimeWarning, stacklevel=3)
 
     def size(self) -> int:
         return int(jnp.sum(self.state.member))

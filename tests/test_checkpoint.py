@@ -11,6 +11,8 @@ from repro.ckpt.manager import CheckpointManager
 from repro.core.multi_sketch import spec_from_meta, spec_to_meta
 from repro.launch.query import SegmentQueryEngine
 
+from tests.faults import CKPT_CORRUPTIONS, corrupt_checkpoint
+
 
 def _objectives():
     return ((C.SUM, 16), (C.COUNT, 8), (C.thresh(2.0), 12))
@@ -122,6 +124,43 @@ def test_corrupt_checkpoint_falls_back_to_previous(tmp_path):
     eng2 = SegmentQueryEngine.from_checkpoint(str(tmp_path))
     assert eng2.num_shards == 1
     assert eng2.query(C.SUM) == pytest.approx(want, rel=1e-6)
+
+
+@pytest.mark.parametrize("mode", CKPT_CORRUPTIONS)
+def test_corruption_matrix_restores_without_raising(tmp_path, mode):
+    """Every damage mode in the matrix — flipped byte, truncated array,
+    deleted manifest, leftover .tmp from a crashed save, missing array
+    file — must fall back via restore_latest without raising."""
+    keys, w = _data(seed=8)
+    spec = C.MultiSketchSpec(objectives=_objectives(), seed=6)
+    eng = SegmentQueryEngine(spec)
+    eng.absorb(keys[:800], w[:800])
+    eng.save_checkpoint(str(tmp_path), step=1)
+    want_step1 = eng.query(C.SUM)
+    eng.absorb(keys[800:], w[800:])
+    eng.save_checkpoint(str(tmp_path), step=2)
+    want_step2 = eng.query(C.SUM)
+
+    corrupt_checkpoint(str(tmp_path), mode)
+    eng2 = SegmentQueryEngine.from_checkpoint(str(tmp_path))
+    if mode == "tmp_dir":
+        # a leftover partial save dir is IGNORED; newest step still loads
+        assert eng2.query(C.SUM) == pytest.approx(want_step2, rel=1e-6)
+    else:
+        # damaged newest step -> silent fallback to the intact step 1
+        assert eng2.query(C.SUM) == pytest.approx(want_step1, rel=1e-6)
+
+
+def test_corruption_of_every_step_raises_cleanly(tmp_path):
+    """No intact step left: the engine loader surfaces a clean
+    FileNotFoundError, not a decode crash."""
+    spec = C.MultiSketchSpec(objectives=_objectives(), seed=6)
+    eng = SegmentQueryEngine(spec)
+    eng.absorb(np.arange(100), np.ones(100, np.float32))
+    eng.save_checkpoint(str(tmp_path), step=1)
+    corrupt_checkpoint(str(tmp_path), "truncate_array")
+    with pytest.raises(FileNotFoundError):
+        SegmentQueryEngine.from_checkpoint(str(tmp_path))
 
 
 def test_save_checkpoint_default_step_auto_bumps(tmp_path):

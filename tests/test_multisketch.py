@@ -175,6 +175,33 @@ def test_stats_collector_streaming_and_segments():
     assert abs(tel.query(C.SUM) / (w.sum() + 50) - 1) < slack
 
 
+def test_stats_collector_warns_once_on_overflow():
+    """Satellite: a saturated pool (S ∪ Z possibly truncated) must raise
+    a RuntimeWarning at query time — exactly once per collector — and
+    expose the flag via ``.overflow``."""
+    import warnings
+    tel = StatsCollector(TelemetryConfig(k=48, capacity=64, chunk=64))
+    # skewed weights: the SUM and COUNT bottom-k samples diverge, so
+    # |S ∪ Z| wants ~2k slots and the 64-slot pool saturates
+    w = np.random.default_rng(0).lognormal(0, 2, 512).astype(np.float32)
+    tel.absorb(np.arange(512), w)
+    assert tel.overflow
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        tel.query(C.SUM)
+        tel.query(C.COUNT)               # second query: no second warning
+    hits = [w for w in rec if "overflowed" in str(w.message)]
+    assert len(hits) == 1 and issubclass(hits[0].category, RuntimeWarning)
+
+    ok = StatsCollector(TelemetryConfig(k=8, capacity=512))
+    ok.absorb(np.arange(64), np.ones(64, np.float32))
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        ok.query(C.SUM)
+    assert not ok.overflow
+    assert not [w for w in rec if "overflowed" in str(w.message)]
+
+
 def test_absorb_is_jit_cached_and_donated():
     """The fold reuses one compiled executable across same-shape chunks."""
     spec = C.MultiSketchSpec(objectives=((C.SUM, 8), (C.COUNT, 8)), seed=1)
