@@ -85,11 +85,65 @@ def render(mesh_tag: str = "sp", fmt: str = "md"):
     return "\n".join(out)
 
 
+def fold_bytes_moved(slab_bytes: int, chunk_rows: int, num_shards: int,
+                     absorb_time: bool = True) -> dict:
+    """Bytes-moved model for ONE absorb epoch of the serving engine
+    (launch.query), in the roofline's memory term.
+
+    The shard fold reads the target shard's slab plus the chunk
+    (int32 key + float32 weight + bool active = 9 B/row) and writes the
+    slab back; absorb-time maintenance adds the merged-slab delta fold
+    (read merged + the post-fold shard slab, write merged). The lazy
+    engine instead pays a full stacked re-merge at the NEXT query: read
+    all ``num_shards`` slabs, write one. Every fold is re-selection-
+    bound, so bytes/HBM_BW is the floor for the epoch's device time.
+    """
+    chunk_bytes = 9 * chunk_rows
+    shard_fold = 2 * slab_bytes + chunk_bytes
+    maintain = 3 * slab_bytes if absorb_time else 0
+    lazy_remerge = 0 if absorb_time else (num_shards + 1) * slab_bytes
+    total = shard_fold + maintain + lazy_remerge
+    return {
+        "shard_fold_bytes": shard_fold,
+        "maintain_bytes": maintain,
+        "lazy_remerge_bytes": lazy_remerge,
+        "epoch_bytes": total,
+        "min_epoch_s": total / HBM_BW,
+    }
+
+
+def render_fold_model() -> str:
+    """Markdown table of the absorb/fold bytes-moved model across the
+    serving configurations the benches exercise."""
+    from repro.core import (COUNT, SUM, MultiSketchSpec, multisketch_slab_bytes,
+                            thresh)
+    spec = MultiSketchSpec(objectives=((SUM, 64), (COUNT, 64),
+                                       (thresh(2.0), 64)), seed=0)
+    b = multisketch_slab_bytes(spec)
+    out = ["| mode | shards | chunk | epoch bytes | min epoch time |",
+           "|" + "---|" * 5]
+    for absorb_time in (True, False):
+        for shards in (2, 8):
+            for chunk in (2048, 8192):
+                m = fold_bytes_moved(b, chunk, shards, absorb_time)
+                mode = "absorb-time" if absorb_time else "lazy"
+                out.append(f"| {mode} | {shards} | {chunk} "
+                           f"| {m['epoch_bytes']} "
+                           f"| {m['min_epoch_s']*1e9:.1f} ns |")
+    return "\n".join(out)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="sp", choices=("sp", "mp"))
+    ap.add_argument("--fold-model", action="store_true",
+                    help="print the absorb/fold bytes-moved model instead "
+                         "of the dry-run table")
     args = ap.parse_args()
-    print(render(args.mesh))
+    if args.fold_model:
+        print(render_fold_model())
+    else:
+        print(render(args.mesh))
 
 
 if __name__ == "__main__":

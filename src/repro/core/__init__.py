@@ -20,10 +20,11 @@ from .multi_sketch import (MultiSketch, MultiSketchSpec, multisketch_absorb,
                            multisketch_absorb_inline, multisketch_absorb_into,
                            multisketch_absorb_slabs, multisketch_build,
                            multisketch_empty, multisketch_estimate,
+                           multisketch_finalize,
                            multisketch_estimate_batch, multisketch_merge,
                            multisketch_merge_stacked, multisketch_overflow,
                            multisketch_query_many, multisketch_select,
-                           quarantine_chunk)
+                           multisketch_slab_bytes, quarantine_chunk)
 from .predicates import (EVERYTHING, SegmentPredicate, encode_predicates,
                          hash_fraction, key_mask, key_range,
                          predicate_matrix)
@@ -54,9 +55,10 @@ __all__ = [
     "multisketch_absorb_inline", "multisketch_absorb_into",
     "multisketch_absorb_slabs",
     "multisketch_build", "multisketch_empty", "multisketch_estimate",
+    "multisketch_finalize",
     "multisketch_estimate_batch", "multisketch_query_many",
     "multisketch_merge", "multisketch_merge_stacked", "multisketch_overflow",
-    "multisketch_select", "quarantine_chunk",
+    "multisketch_select", "multisketch_slab_bytes", "quarantine_chunk",
     "SegmentPredicate", "EVERYTHING", "key_range", "key_mask",
     "hash_fraction", "encode_predicates", "predicate_matrix",
     "MetricSample", "MetricSketch", "universal_metric_sample",

@@ -80,6 +80,55 @@ invariants above are exactly what make that correct:
       engine-owned merged-slab buffers; a slab handed out via the public
       ``merged`` property is re-pointed (copied) first, and resident
       shard slabs ride the delta WITHOUT donation.
+
+  ABSORB-TIME MAINTENANCE (zero-merge serving, the engine default).
+  The same delta fold can run one query early: after the shard fold of
+  an absorb, the POST-FOLD shard slab is folded into the cached merged
+  slab in the same donated epoch, so the cache is already current when
+  the next query arrives — the query path dispatches ZERO merge work
+  (asserted by dispatch-count spies in the test tier and the bench-smoke
+  CI gate). Exactness is the incremental contract verbatim (the shard
+  slab summarizes a superset of the delta; max-weight dedup makes
+  re-folding its older rows a no-op), under the same preconditions:
+  maintenance only runs while the cache is current, the history is
+  monotone and capacity is non-truncating — any violation falls back to
+  the lazy ladder and reseeds maintenance at the next full merge. The
+  MERGED SLAB IS AUTHORITATIVE between epochs: queries never consult
+  shard slabs directly, so quarantine (rejected NaN/negative rows never
+  reach a fold) and the ``overflow`` flag — refreshed at most once per
+  epoch at query time, never on the absorb path, which must not pay a
+  device sync — both describe the merged slab the answers came from.
+
+  BIT-IDENTITY MECHANISM (``multisketch_finalize``). Value-exactness of
+  every path above is the threshold-closure argument; BIT-exactness of
+  ``probs`` additionally requires one canonical program for the
+  inclusion probability, because XLA codegens transcendentals with
+  shape-dependent last-ulp rounding (a [c] delta fold and a [m, c]
+  stacked re-merge can disagree by one ulp on the same slab). Every
+  host-level producer therefore overwrites probs with the fixed-shape
+  spec-keyed finalizer after compaction; in-trace producers
+  (``multisketch_absorb_inline``, shard_map interiors) are finalized at
+  their host-level boundary (``launch.summary.sharded_multisketch``).
+
+  SHARD LIFECYCLE (GC / evict / spill). Long-running engines bound live
+  shard count and device bytes: ``gc`` folds cold shards (oldest
+  last-absorb epoch first, under ``max_live``/``min_age`` water-marks)
+  into the compacted BASE slab (shard 0) with the same exact delta fold,
+  parks victims on a shared inert slab and truncates trailing dead
+  shards — the union is unchanged, so a current merged cache is
+  re-stamped across the GC epoch, never re-merged, and answers are
+  bit-identical to keeping the shards separate. ``gc_plan`` is pure and
+  deterministic in the absorb history, so a serving tier can WAL the
+  victim list BEFORE applying (apply-then-append, launch.wal GC
+  markers): replay reproduces the RECORDED decision and lands in the
+  identical post-GC state; a marker lost to a crash merely replays into
+  the pre-GC layout, whose merged slab is bit-identical. ``spill``
+  persists victim slabs through ckpt.manager first, so evicted shards
+  can be re-adopted later (``from_checkpoint`` + ``add_shard``) —
+  a long-running ``EnginePool`` stream holds O(capacity) device memory,
+  with ``merge_stats`` gauges (live_shards, gc_merges, bytes_resident)
+  exposed through pool responses and telemetry.
+
   * slabs are plain arrays, so CHECKPOINTING is ``ckpt.manager`` over the
     shard list plus the spec stored as JSON extra-metadata
     (``multi_sketch.spec_to_meta``); ``SegmentQueryEngine.from_checkpoint``

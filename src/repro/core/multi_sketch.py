@@ -141,6 +141,15 @@ def multisketch_empty(spec: MultiSketchSpec) -> MultiSketch:
         taus=jnp.full((nf,), _INF, jnp.float32))
 
 
+def multisketch_slab_bytes(spec: MultiSketchSpec) -> int:
+    """Static wire/device size of ONE slab in bytes — keys/weights/probs
+    (3 x 4c) + seeds (4 x nf x c) + member/aux/valid (3 x c) + taus
+    (4 x nf). The unit of every bytes-moved model over folds and of the
+    engine's ``bytes_resident`` gauge."""
+    c, nf = spec.cap, spec.nf
+    return c * (15 + 4 * nf) + 4 * nf
+
+
 # ---------------------------------------------------------------------------
 # selection (member/prob/aux/taus over a fixed-shape batch)
 # ---------------------------------------------------------------------------
@@ -262,6 +271,47 @@ def _rebuild(spec: MultiSketchSpec, keys, weights, valid,
 
 
 # ---------------------------------------------------------------------------
+# probs finalizer: one canonical program for the inclusion probability
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("spec",))
+def _finalize_probs_jit(weights, seeds, member, valid, taus, *, spec):
+    """Recompute p^(F) from the compacted slab in ONE fixed-shape program.
+
+    The retained multiset (keys/weights/seeds/member/taus) of any merge
+    path is exact by threshold closure, but ``probs`` passes through a
+    transcendental (the ppswor ``-expm1(-f(w)*tau)``), and XLA codegens
+    transcendentals with shape-dependent last-ulp rounding — two
+    differently-shaped fold programs (a [c] delta fold vs a [m, c]
+    stacked re-merge) can disagree by one ulp on the same slab. Host
+    entry points therefore overwrite probs with this [c]-shaped program,
+    keyed only by spec: identical slabs get identical prob bits no
+    matter which fold produced them.
+
+    Per-objective membership is recovered as ``seed < tau`` (strict):
+    no seed lies strictly between the k-th smallest (the member bound)
+    and tau, the (k+1)-th, so strict-< reproduces the original
+    ``seed <= kth`` test exactly (modulo measure-zero seed ties at the
+    boundary, impossible for distinct keys under a continuous hash).
+    """
+    fvals = jnp.stack([jnp.where(valid, f(weights), 0.0)
+                       for f, _ in spec.objectives])
+    member_f = (seeds < taus[:, None]) & member[None, :]
+    p_f = jnp.where(member_f,
+                    conditional_prob(fvals, taus[:, None], spec.scheme), 0.0)
+    return jnp.where(member, p_f.max(axis=0), 0.0)
+
+
+def multisketch_finalize(sk: MultiSketch, *,
+                         spec: MultiSketchSpec) -> MultiSketch:
+    """Canonicalize ``sk.probs`` (see ``_finalize_probs_jit``). Idempotent;
+    every host-level producer in this module applies it on return, so
+    slabs with equal retained state compare bit-equal in all 8 fields."""
+    return sk._replace(probs=_finalize_probs_jit(
+        sk.weights, sk.seeds, sk.member, sk.valid, sk.taus, spec=spec))
+
+
+# ---------------------------------------------------------------------------
 # public entry points
 # ---------------------------------------------------------------------------
 
@@ -308,11 +358,14 @@ def multisketch_build(spec: MultiSketchSpec, keys, weights, active=None,
     active = (jnp.ones(keys.shape, bool) if active is None
               else jnp.asarray(active, bool))
     if seed is not None:
-        return _build_seeded_jit(keys, weights, active,
-                                 jnp.asarray(seed, jnp.int32),
-                                 spec=spec, use_kernels=False)
-    return _build_jit(keys, weights, active, spec=spec,
-                      use_kernels=True if use_kernels is None else use_kernels)
+        return multisketch_finalize(
+            _build_seeded_jit(keys, weights, active,
+                              jnp.asarray(seed, jnp.int32),
+                              spec=spec, use_kernels=False), spec=spec)
+    return multisketch_finalize(
+        _build_jit(keys, weights, active, spec=spec,
+                   use_kernels=True if use_kernels is None else use_kernels),
+        spec=spec)
 
 
 def multisketch_absorb_inline(spec: MultiSketchSpec, state: MultiSketch,
@@ -352,11 +405,12 @@ def multisketch_absorb(state: MultiSketch, keys, weights, active=None, *,
     allocation. The old ``state`` must not be used again.
     """
     keys = jnp.asarray(keys, jnp.int32).reshape(-1)
-    return _absorb_jit(
+    return multisketch_finalize(_absorb_jit(
         state, keys, jnp.asarray(weights, jnp.float32).reshape(-1),
         (jnp.ones(keys.shape, bool) if active is None
          else jnp.asarray(active, bool).reshape(-1)),
-        spec=spec, use_kernels=True if use_kernels is None else use_kernels)
+        spec=spec, use_kernels=True if use_kernels is None else use_kernels),
+        spec=spec)
 
 
 @partial(jax.jit, static_argnames=("spec", "use_kernels"),
@@ -446,10 +500,11 @@ def multisketch_absorb_slabs(state: MultiSketch, delta_keys, delta_weights,
         dv = jnp.asarray(dv, bool).reshape(-1)
     if pad_deltas and dk.shape[0] != spec.cap:
         dk, dw, dv = delta_slab_pad(dk, dw, dv, spec.cap)
-    return _absorb_into_jit(state.keys, state.weights, state.probs,
-                            state.seeds, state.member, state.aux,
-                            state.valid, state.taus, dk, dw, dv,
-                            spec=spec, use_kernels=use_kernels)
+    return multisketch_finalize(
+        _absorb_into_jit(state.keys, state.weights, state.probs,
+                         state.seeds, state.member, state.aux,
+                         state.valid, state.taus, dk, dw, dv,
+                         spec=spec, use_kernels=use_kernels), spec=spec)
 
 
 @partial(jax.jit, static_argnames=("spec", "use_kernels"))
@@ -463,18 +518,23 @@ def _merge_jit(a, b, *, spec, use_kernels):
 def multisketch_merge(spec: MultiSketchSpec, a: MultiSketch, b: MultiSketch,
                       use_kernels: Optional[bool] = None) -> MultiSketch:
     """Exact merge of two sketches built under the same spec."""
-    return _merge_jit(a, b, spec=spec,
-                      use_kernels=True if use_kernels is None else use_kernels)
+    return multisketch_finalize(_merge_jit(
+        a, b, spec=spec,
+        use_kernels=True if use_kernels is None else use_kernels), spec=spec)
 
 
 def multisketch_merge_stacked(spec: MultiSketchSpec, stacked: MultiSketch,
                               use_kernels: bool = False) -> MultiSketch:
     """Merge a stacked batch of sketches (leaves have a leading [m] axis,
     e.g. straight out of ``all_gather``) in ONE re-selection — no tree
-    reduction. Works inside shard_map (default use_kernels=False)."""
-    return _rebuild(spec, stacked.keys.reshape(-1),
-                    stacked.weights.reshape(-1), stacked.valid.reshape(-1),
-                    use_kernels)
+    reduction. Works inside shard_map (default use_kernels=False; the
+    finalize inlines into the enclosing trace there — in-trace callers
+    that need canonical prob bits re-finalize the host-level result, as
+    ``launch.summary.sharded_multisketch`` does)."""
+    return multisketch_finalize(
+        _rebuild(spec, stacked.keys.reshape(-1),
+                 stacked.weights.reshape(-1), stacked.valid.reshape(-1),
+                 use_kernels), spec=spec)
 
 
 def pad_chunk(keys, weights, active=None, chunk: int = 256):

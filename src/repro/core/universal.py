@@ -96,7 +96,14 @@ def _buffer_scan_ref(values, indices, k_plus_1: int):
         v, i = xs
         rank = jnp.sum(buf_v < v).astype(jnp.int32)
         do_insert = rank < k_plus_1
-        # insert v at position ``rank``, shifting the tail right (evict last)
+        # insert v at position ``rank`` — rank counts STRICTLY smaller
+        # entries, so a tied v lands before every equal-valued entry —
+        # shifting the suffix right and evicting the current tail slot.
+        # On a tie at the capacity boundary (v == buf_v[-1]) the insert
+        # still happens: the old tail is evicted, tail_v is unchanged and
+        # tail_i becomes the index of the shifted equal-valued entry. The
+        # blocked scan reproduces this bit-exactly because its phase-1
+        # rank uses the same strict-< count (searchsorted side='left').
         rolled_v = jnp.concatenate([buf_v[:1], buf_v[:-1]])
         rolled_i = jnp.concatenate([buf_i[:1], buf_i[:-1]])
         new_v = jnp.where(slots < rank, buf_v,
@@ -202,8 +209,10 @@ def _buffer_scan(values, indices, k_plus_1: int):
 
 
 def _insert_bound(n: int, k1: int) -> int:
-    """Static capacity for the inserted subsequence: ~4x the expected
-    count k1 * (1 + ln(n / k1)) (harmonic bound), rounded up."""
+    """Static capacity for the inserted subsequence: ~4x the padded
+    harmonic bound k1 * (2 + ln(n / k1 + 1)) — an upper bound on the
+    expected count k1 * (1 + ln(n / k1)) that stays safe when n ~ k1 —
+    rounded up to the 128 quantum (floor 256, ceiling n)."""
     import math
     exp = k1 * (2.0 + math.log(max(n, 2) / max(k1, 1) + 1.0))
     return min(n, max(256, -(-4 * int(exp) // 128) * 128))

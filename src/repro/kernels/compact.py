@@ -60,11 +60,16 @@ def retention_priority(sorted_keys, weights, member, keep, interpret=None):
     """
     interpret = resolve_interpret(interpret)
     n = sorted_keys.shape[0]
-    # delta-slab sizing: incremental merges re-select over a few hundred
-    # retained slots ((1 + dirty) x capacity), not a streaming batch — fit
-    # the block to the input (lane-aligned) instead of padding every call
-    # to the full streaming BLOCK
-    b = min(BLOCK, round_up(max(n, 1), 128))
+    # delta-slab sizing: absorb-time maintenance re-selects over a few
+    # hundred retained slots ((1 + dirty) x capacity) every epoch, not a
+    # streaming batch — fit the block to the input (lane-aligned) instead
+    # of padding every call to the full streaming BLOCK. Splitting the
+    # grid first keeps the pad under one lane-quantum per block (n=1100:
+    # 2 x 640 = 1280 padded rows, vs 2048 when clamping to BLOCK); the
+    # kernel is elementwise and pad rows are sliced off, so sizing never
+    # affects the retained bits.
+    g = -(-max(n, 1) // BLOCK)
+    b = min(BLOCK, round_up(-(-max(n, 1) // g), 128))
     npad = round_up(max(n, 1), b)
     sk = pad_tail(sorted_keys.astype(jnp.int32), npad, -1)
     prev = jnp.concatenate([jnp.full((1,), -2, jnp.int32), sk[:-1]])

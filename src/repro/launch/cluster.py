@@ -122,6 +122,11 @@ class ClusterEngine:
         self._norm = None            # frozen per-anchor column sums
         self._epoch = 0
         self._next_key = 0
+        # natively absorb-time maintained: the fold + coords realignment
+        # land in the SAME epoch, so queries never pay merge work — the
+        # counters mirror SegmentQueryEngine.merge_stats for telemetry
+        self.merge_stats = {"absorb_time": 0, "bytes_resident": 0}
+        self._update_gauges()
 
     @classmethod
     def fit(cls, X, **kw) -> "ClusterEngine":
@@ -192,6 +197,14 @@ class ClusterEngine:
             self._sketch.keys, old_keys, old_coords,
             jnp.asarray(keys, jnp.int32), Ppad)
         self._epoch += 1
+        self.merge_stats["absorb_time"] += 1
+        self._update_gauges()
+
+    def _update_gauges(self):
+        """Device residency gauge (host-side, no sync): slab + coords."""
+        self.merge_stats["bytes_resident"] = (
+            sum(int(getattr(x, "nbytes", 0)) for x in self._sketch)
+            + int(getattr(self._coords, "nbytes", 0)))
 
     def sample(self):
         """(coords [cap, dim], probs [cap], member [cap]) — the resident

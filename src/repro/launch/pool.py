@@ -35,6 +35,15 @@ stale" instead of "occasionally down":
     snapshots. Crash recovery = restore newest intact snapshot -> replay
     the WAL tail -> lazy merge, BIT-IDENTICAL to the uncrashed engine
     (asserted in tests/test_serving_faults.py).
+  * ADMIN OPS — ``request_gc``/``gc``/``compact`` ride a separate admin
+    queue on the same admission loop: each ``pump`` serves EVERY pending
+    query first, then at most ONE admin op (GC never starves reads), with
+    the same deadline semantics. A GC drains the stream's fold backlog,
+    applies the engine's shard GC (``gc_plan``/``gc_apply``), then
+    appends a WAL GC marker (``wal.GC_SHARD``) carrying the victim list —
+    apply-then-append, so recovery replays the recorded decision and
+    lands in the identical post-GC shard layout. Responses served while
+    the engine's newest epoch is a GC epoch are labeled ``gc_epoch``.
 
 Fault-injection hooks: every failure-prone operation funnels through a
 named fault point (``_fault_point``); the chaos harness (tests/faults.py)
@@ -62,7 +71,7 @@ from repro.core.multi_sketch import (MultiSketchSpec, multisketch_overflow,
                                      spec_to_meta)
 from repro.core.predicates import EVERYTHING, encode_predicates
 from repro.launch.query import SegmentQueryEngine
-from repro.launch.wal import WriteAheadLog
+from repro.launch.wal import GC_SHARD, WriteAheadLog
 
 # degradation-ladder response statuses (the serving contract, core.merge)
 FRESH = "FRESH"
@@ -116,6 +125,11 @@ class Response:
     epoch_lag: int = 0
     overflow: bool = False
     error: Optional[str] = None
+    # the served slab's newest epoch was produced by a shard-GC merge
+    # (same union, compacted layout) — labeled, like staleness
+    gc_epoch: bool = False
+    # admin-op (gc/compact) responses only: victim shards merged
+    gc_victims: Optional[Tuple[int, ...]] = None
 
     @property
     def ok(self) -> bool:
@@ -159,6 +173,15 @@ class _Request:
     stream: str
     fs: Tuple[StatFn, ...]
     table: np.ndarray           # encoded predicate rows [b, PRED_COLS]
+    deadline: Optional[float]
+    future: PoolFuture
+
+
+@dataclasses.dataclass
+class _GcRequest:
+    stream: str
+    max_live: Optional[int]
+    min_age: Optional[int]
     deadline: Optional[float]
     future: PoolFuture
 
@@ -258,6 +281,7 @@ class EnginePool:
         self._sleep = sleep
         self._streams: Dict[str, _Stream] = {}
         self._queue: deque = deque()
+        self._admin: deque = deque()   # gc/compact ops, served after queries
         self._lock = threading.Lock()
         self._worker: Optional[threading.Thread] = None
         self._stop = threading.Event()
@@ -337,8 +361,13 @@ class EnginePool:
         _fault_point("wal_replay", name)
         seq = applied
         for rec in wal.replay(min_seq_exclusive=applied):
-            engine.absorb(rec.keys, rec.weights, rec.active,
-                          shard=rec.shard)
+            if rec.shard < 0:
+                # GC marker: re-apply the RECORDED victim list, so the
+                # restored shard layout matches the uncrashed engine's
+                engine.gc_apply([int(x) for x in rec.keys])
+            else:
+                engine.absorb(rec.keys, rec.weights, rec.active,
+                              shard=rec.shard)
             seq = rec.seq
         st.ingest_seq = st.applied_seq = seq
         self._streams[name] = st
@@ -362,6 +391,10 @@ class EnginePool:
         backlog replays. Backlog past ``pending_limit`` sheds load with
         :class:`RejectedError` (bounded memory, never silent loss: the
         rejected chunk was not ack'd)."""
+        if shard < 0:
+            raise ValueError(
+                f"shard must be >= 0, got {shard} (negative values are "
+                f"reserved for WAL control records)")
         st = self._stream(name)
         k, w, act, n_bad = quarantine_chunk(keys, weights)
         st.quarantined += n_bad
@@ -402,6 +435,12 @@ class EnginePool:
             st.pending.popleft()
             st.applied_seq = seq
             st.folds_since_snapshot += 1
+        # charge the device work to the ingest path: the folds (and the
+        # absorb-time merged-slab maintenance riding them) finish HERE,
+        # so the next query never drains this epoch's backlog on its
+        # critical path — the zero-merge query contract in wall-clock
+        # terms, not just dispatch counts
+        st.engine.drain()
         return True
 
     def _fold_one(self, st: _Stream, shard, k, w, act):
@@ -455,20 +494,22 @@ class EnginePool:
     def pump(self) -> int:
         """Drain the admission queue once: drop expired requests
         (REJECTED/"deadline"), coalesce the rest by (stream, objectives)
-        and serve each group as ONE fused B-bucket launch. Returns the
-        number of requests answered."""
+        and serve each group as ONE fused B-bucket launch; then serve at
+        most ONE pending admin op (gc/compact) — queries always go first,
+        so maintenance never starves reads. Returns the number of
+        requests answered (queries + admin)."""
         with self._lock:
             batch = list(self._queue)
             self._queue.clear()
-        if not batch:
-            return 0
+            admin = self._admin.popleft() if self._admin else None
+        served = 0
         groups: Dict[Tuple[str, Tuple[StatFn, ...]], list] = {}
         for r in batch:
             if r.deadline is not None and self._clock() > r.deadline:
                 r.future._set(Response(REJECTED, error="deadline"))
                 continue
             groups.setdefault((r.stream, r.fs), []).append(r)
-        served = len(batch)
+        served += len(batch)
         for (name, fs), reqs in groups.items():
             table = np.concatenate([r.table for r in reqs])
             resp = self._serve_group(self._stream(name), fs, table)
@@ -479,6 +520,15 @@ class EnginePool:
                         else resp.values[:, col:col + b])
                 col += b
                 r.future._set(dataclasses.replace(resp, values=vals))
+        if admin is not None:
+            if (admin.deadline is not None
+                    and self._clock() > admin.deadline):
+                admin.future._set(Response(REJECTED, error="deadline"))
+            else:
+                admin.future._set(self._do_gc(self._stream(admin.stream),
+                                              admin.max_live,
+                                              admin.min_age))
+            served += 1
         return served
 
     def query(self, name: str, fs: Optional[Sequence[StatFn]] = None,
@@ -489,6 +539,76 @@ class EnginePool:
         fut = self.submit(name, fs, predicates, timeout)
         self.pump()
         return fut.result(timeout=None if timeout is None else timeout + 1.0)
+
+    # -- admin ops (shard GC / compaction) -----------------------------------
+    def request_gc(self, name: str, max_live: Optional[int] = None,
+                   min_age: Optional[int] = None,
+                   timeout: Optional[float] = None) -> PoolFuture:
+        """Enqueue a shard-GC admin op for one stream. Served by ``pump``
+        AFTER every pending query (at most one admin op per pump — a
+        long compaction can only ever delay other maintenance, never a
+        read). Deadline-aware like queries: an op past its deadline is
+        answered REJECTED/"deadline". The response's ``gc_victims`` lists
+        the shards merged (empty tuple: nothing eligible)."""
+        self._stream(name)                 # validate up front
+        fut = PoolFuture()
+        deadline = None if timeout is None else self._clock() + timeout
+        with self._lock:
+            self._admin.append(_GcRequest(name, max_live, min_age,
+                                          deadline, fut))
+        return fut
+
+    def gc(self, name: str, max_live: Optional[int] = None,
+           min_age: Optional[int] = None,
+           timeout: Optional[float] = None) -> Response:
+        """Synchronous shard GC: request + pump + result."""
+        fut = self.request_gc(name, max_live, min_age, timeout)
+        self.pump()
+        return fut.result(timeout=None if timeout is None else timeout + 1.0)
+
+    def compact(self, name: str, timeout: Optional[float] = None
+                ) -> Response:
+        """Full compaction: merge every live shard into the base slab."""
+        return self.gc(name, max_live=1, timeout=timeout)
+
+    def _do_gc(self, st: _Stream, max_live, min_age) -> Response:
+        """Apply a shard GC under the durability contract: drain the fold
+        backlog first (the plan must see every applied chunk, and the WAL
+        marker must sequence AFTER the data it follows), apply the merge,
+        THEN append the GC marker. Apply-then-append: a crash between the
+        two loses only the GC directive — recovery replays the data into
+        the pre-GC layout, whose merged union (hence every answer) is
+        identical."""
+        if st.pending:
+            ok = st.breaker.allow() and self._drain_pending(st)
+            if not ok:
+                return Response(REJECTED,
+                                error="fold backlog not applied (breaker)")
+        victims = st.engine.gc_plan(max_live, min_age)
+        if not victims:
+            return Response(FRESH, gc_victims=())
+        try:
+            st.engine.gc_apply(victims)
+        except Exception as e:
+            st.breaker.record_failure()
+            return Response(REJECTED, error=f"{type(e).__name__}: {e}")
+        err = None
+        seq = st.ingest_seq + 1
+        if st.wal is not None:
+            try:
+                _fault_point("wal_append", st.name)
+                v = np.asarray(victims, np.int32)
+                st.wal.append(seq, GC_SHARD, v,
+                              np.zeros(len(victims), np.float32),
+                              np.ones(len(victims), np.uint8))
+            except Exception as e:
+                # GC applied but the marker is lost: recovery replays into
+                # the pre-GC layout — same union, so answers are identical
+                err = f"gc marker not durable: {type(e).__name__}: {e}"
+        st.ingest_seq = seq
+        st.applied_seq = seq
+        return Response(FRESH, gc_epoch=True, gc_victims=tuple(victims),
+                        error=err)
 
     # -- the degradation ladder ----------------------------------------------
     def _serve_group(self, st: _Stream, fs, table) -> Response:
@@ -505,7 +625,9 @@ class EnginePool:
                 return Response(FRESH if lag == 0 else STALE, vals,
                                 epoch_lag=lag,
                                 overflow=bool(
-                                    st.engine.merge_stats["overflow"]))
+                                    st.engine.merge_stats["overflow"]),
+                                gc_epoch=(st.engine.last_gc_epoch
+                                          == st.engine.epoch))
             except Exception as e:
                 st.breaker.record_failure()
                 err = f"{type(e).__name__}: {e}"
@@ -585,4 +707,5 @@ class EnginePool:
                 "breaker_open": st.breaker.is_open,
                 "breaker_opens": st.breaker.open_count,
                 "snapshot_failures": st.snapshot_failures,
+                "gc_epoch": st.engine.last_gc_epoch == st.engine.epoch,
                 "merge_stats": dict(st.engine.merge_stats)}

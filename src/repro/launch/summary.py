@@ -30,6 +30,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.multi_sketch import (MultiSketch, MultiSketchSpec,
                                      multisketch_build,
+                                     multisketch_finalize,
                                      multisketch_merge_stacked)
 from repro.launch.mesh import shard_map_compat
 
@@ -62,7 +63,11 @@ def sharded_multisketch(spec: MultiSketchSpec, mesh, keys, weights,
         local, mesh,
         in_specs=(P(axis), P(axis), P(axis)),
         out_specs=jax.tree.map(lambda _: P(), multisketch_shape(spec)))
-    return jax.jit(fn)(keys, weights, active)
+    # re-finalize at host level: the in-trace finalize inlined into the
+    # shard_map program, and canonical prob bits require the one
+    # fixed-shape finalizer program (core.multi_sketch)
+    return multisketch_finalize(jax.jit(fn)(keys, weights, active),
+                                spec=spec)
 
 
 def sharded_multisketch_shards(spec: MultiSketchSpec, mesh, keys, weights,

@@ -22,6 +22,17 @@ Replay stops at the first torn/corrupt frame (short read, bad magic, crc
 mismatch, non-increasing seq): a torn tail — the expected crash artifact —
 silently yields every complete record before it; mid-file corruption is
 treated the same way (conservative: the seq chain past it is suspect).
+
+GC markers: a record with ``shard == GC_SHARD`` (-1) is a shard-GC
+directive, not data — its ``keys`` payload holds the VICTIM shard
+indices (int32) the engine merged into its base slab; weights/active are
+padding. The pool appends the marker AFTER a successful ``gc_apply``
+(apply-then-append: a crash between the two loses only the GC directive,
+never data, and the merged union — hence every query answer — is
+identical either way), and recovery replays it as
+``engine.gc_apply(keys)`` so the restored shard layout matches the
+uncrashed engine's exactly. Replay of data records must therefore
+dispatch on the shard sign.
 """
 from __future__ import annotations
 
@@ -33,6 +44,7 @@ from typing import Iterator, NamedTuple, Optional
 import numpy as np
 
 _MAGIC = b"MOW1"
+GC_SHARD = -1                  # marker record: keys = GC victim indices
 _HEADER = struct.Struct("<4sQiiI")
 _BODY = struct.Struct("<QiI")  # the crc-covered header fields (seq, shard, n)
 _MAX_ROWS = 1 << 24            # frame sanity bound (rejects garbage lengths)

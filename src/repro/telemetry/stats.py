@@ -31,7 +31,8 @@ import numpy as np
 from repro.core import (COUNT, SUM, MultiSketch, MultiSketchSpec,
                         multisketch_absorb, multisketch_empty,
                         multisketch_merge, multisketch_overflow,
-                        multisketch_query_many, sketch_estimate)
+                        multisketch_query_many, multisketch_slab_bytes,
+                        sketch_estimate)
 from repro.core.multi_sketch import pad_chunk
 from repro.core.funcs import StatFn
 from repro.core.predicates import EVERYTHING, SegmentPredicate
@@ -128,6 +129,20 @@ class StatsCollector:
 
     def size(self) -> int:
         return int(jnp.sum(self.state.member))
+
+    def stats(self) -> dict:
+        """Resident-footprint gauges under the serving tier's
+        ``merge_stats`` wire names, so collector telemetry can be
+        exported next to `EnginePool` stream stats: the collector is a
+        single always-compacted slab, so bytes are a spec constant and
+        live_shards is 1 by construction."""
+        return {
+            "bytes_resident": multisketch_slab_bytes(self.spec),
+            "live_shards": 1,
+            "gc_merges": 0,
+            "live_keys": self.size(),
+            "multisketch_overflow": self.overflow,
+        }
 
     @property
     def sketch(self) -> MultiSketch:

@@ -1,13 +1,18 @@
-"""Incremental merged-slab maintenance (PR 5 tentpole).
+"""Incremental + absorb-time merged-slab maintenance.
 
-The delta fold (``multisketch_absorb_into`` — dirty shards folded into the
-cached merged slab, donated buffers) must be BIT-IDENTICAL to the full
-stacked re-merge for any absorb history, across schemes and |F|; an
-incremental epoch must dispatch the delta-fold launches ONLY (no full
-``merge_stacked``), the full path must stay unchanged, and non-monotone
-mutations (set_shard / load_stacked) must force the full path. Plus the
-ClusterEngine twin: delta-aware coords realignment bit-identical to the
-full candidate lookup.
+The lazy ladder (PR 5): the delta fold (``multisketch_absorb_into`` —
+dirty shards folded into the cached merged slab, donated buffers) must be
+BIT-IDENTICAL to the full stacked re-merge for any absorb history, across
+schemes and |F|; an incremental epoch must dispatch the delta-fold
+launches ONLY (no full ``merge_stacked``), the full path must stay
+unchanged, and non-monotone mutations (set_shard / load_stacked) must
+force the full path. Lazy-ladder tests pin ``absorb_time=False``.
+
+Absorb-time maintenance (PR 7 default): every query under churn is a pure
+cache hit — ZERO merge dispatches on the query path (asserted via
+``tests.dispatch_spy``) — and the maintained slab is bit-identical to the
+lazy full re-merge oracle. Plus the ClusterEngine twin: delta-aware
+coords realignment bit-identical to the full candidate lookup.
 """
 import numpy as np
 import jax
@@ -18,6 +23,7 @@ import repro.core as C
 from repro.core.multi_sketch import MultiSketch, multisketch_absorb_into
 from repro.launch import query as Q
 from repro.launch.query import SegmentQueryEngine
+from tests.dispatch_spy import spy_merge_dispatch
 from tests.test_batched_multiobj import _count_pallas_calls
 
 
@@ -42,9 +48,12 @@ def _assert_bitsame(a: MultiSketch, b: MultiSketch, msg=""):
 
 
 def _twin_engines(spec, shards, keys, w):
-    """(incremental-enabled, forced-full) engines over the same absorbs."""
-    inc = SegmentQueryEngine(spec, shards=shards)
-    full = SegmentQueryEngine(spec, shards=shards, max_delta=0)
+    """(incremental-enabled, forced-full) LAZY engines over the same
+    absorbs — absorb-time maintenance off, so the query-time ladder
+    (hit / delta fold / full re-merge) is what's under test."""
+    inc = SegmentQueryEngine(spec, shards=shards, absorb_time=False)
+    full = SegmentQueryEngine(spec, shards=shards, max_delta=0,
+                              absorb_time=False)
     for i in range(shards):
         for e in (inc, full):
             e.absorb(keys[i::shards], w[i::shards], shard=i)
@@ -162,34 +171,24 @@ def test_incremental_epoch_dispatches_delta_fold_only(monkeypatch):
     dispatch); full-path epochs and cache hits stay unchanged."""
     keys, w = _data(n=1200, seed=8)
     spec = C.MultiSketchSpec(objectives=_objectives(2), seed=2)
-    eng = SegmentQueryEngine(spec, shards=2)
+    eng = SegmentQueryEngine(spec, shards=2, absorb_time=False)
     eng.absorb(keys[::2], w[::2], shard=0)
     eng.absorb(keys[1::2], w[1::2], shard=1)
     eng._materialize_merged()                      # initial full merge
-    calls = {"full": 0, "inc": 0}
-    real_merge, real_into = Q._merge_stacked_jit, Q.multisketch_absorb_slabs
-
-    def spy_merge(*a, **k):
-        calls["full"] += 1
-        return real_merge(*a, **k)
-
-    def spy_into(*a, **k):
-        calls["inc"] += 1
-        return real_into(*a, **k)
-
-    monkeypatch.setattr(Q, "_merge_stacked_jit", spy_merge)
-    monkeypatch.setattr(Q, "multisketch_absorb_slabs", spy_into)
-    eng.absorb(np.arange(30_000, 30_200), np.ones(200, np.float32), shard=1)
-    eng.query_many()                               # incremental epoch
-    assert calls == {"full": 0, "inc": 1}
-    eng.query_many()                               # cache hit: no dispatch
-    assert calls == {"full": 0, "inc": 1}
-    assert eng.merge_stats["hit"] >= 1
-    # forced-full twin: merge_stacked only, never the delta fold
-    eng.max_delta = 0
-    eng.absorb(np.arange(31_000, 31_200), np.ones(200, np.float32), shard=0)
-    eng.query_many()
-    assert calls == {"full": 1, "inc": 1}
+    with spy_merge_dispatch() as calls:
+        eng.absorb(np.arange(30_000, 30_200), np.ones(200, np.float32),
+                   shard=1)
+        eng.query_many()                           # incremental epoch
+        assert calls == {"full": 0, "inc": 1}
+        eng.query_many()                           # cache hit: no dispatch
+        assert calls == {"full": 0, "inc": 1}
+        assert eng.merge_stats["hit"] >= 1
+        # forced-full twin: merge_stacked only, never the delta fold
+        eng.max_delta = 0
+        eng.absorb(np.arange(31_000, 31_200), np.ones(200, np.float32),
+                   shard=0)
+        eng.query_many()
+        assert calls == {"full": 1, "inc": 1}
 
 
 @pytest.mark.parametrize("m", [1, 2, 4])
@@ -245,7 +244,7 @@ def test_merged_handle_survives_incremental_fold():
     delta fold (which donates only engine-owned buffers)."""
     spec = C.MultiSketchSpec(objectives=_objectives(2), seed=8)
     keys, w = _data(n=1000, seed=12)
-    eng = SegmentQueryEngine(spec, shards=2)
+    eng = SegmentQueryEngine(spec, shards=2, absorb_time=False)
     eng.absorb(keys[::2], w[::2], shard=0)
     eng.absorb(keys[1::2], w[1::2], shard=1)
     held = eng.merged                              # public handout
@@ -256,6 +255,113 @@ def test_merged_handle_survives_incremental_fold():
     assert eng.merge_stats["incremental"] == 1
     assert int(jnp.sum(held.member)) == before     # not donated away
     np.testing.assert_array_equal(np.asarray(held.keys), snap)
+
+
+# ------------------------------------------------- absorb-time maintenance
+@pytest.mark.parametrize("scheme", ["ppswor", "priority"])
+@pytest.mark.parametrize("nf", [1, 3])
+def test_absorb_time_bitidentical_to_lazy_oracle(scheme, nf):
+    """Absorb-time maintenance == the lazy full re-merge oracle, bit for
+    bit, at every churn epoch — and the query path dispatches NOTHING."""
+    keys, w = _data(n=2000, seed=13)
+    spec = C.MultiSketchSpec(objectives=_objectives(nf), scheme=scheme,
+                             seed=21)
+    zm = SegmentQueryEngine(spec, shards=3)               # the default
+    oracle = SegmentQueryEngine(spec, shards=3, max_delta=0,
+                                absorb_time=False)
+    for i in range(3):
+        for e in (zm, oracle):
+            e.absorb(keys[i::3], w[i::3], shard=i)
+    # first query warms the cache (cold start takes the lazy ladder once)
+    _assert_bitsame(zm._materialize_merged(), oracle._materialize_merged())
+    rng = np.random.default_rng(nf)
+    for it in range(4):
+        ek = np.arange(80_000 + 400 * it, 80_000 + 400 * it + 250)
+        ew = rng.lognormal(0, 1, 250).astype(np.float32)
+        zm.absorb(ek, ew, shard=it % 3)
+        oracle.absorb(ek, ew, shard=it % 3)
+        with spy_merge_dispatch() as calls:
+            got = zm._materialize_merged()
+        assert calls == {"full": 0, "inc": 0}, f"epoch {it} dispatched"
+        _assert_bitsame(got, oracle._materialize_merged(),
+                        msg=f"epoch {it}: ")
+    assert zm.merge_stats["absorb_time"] == 4
+    assert zm.merge_stats["hit"] >= 4
+
+
+def test_absorb_time_single_shard_realias_no_double_fold():
+    """Single-shard engine: the maintained cache ALIASES the shard, so an
+    absorb epoch folds the chunk ONCE (the shard fold is the merged-slab
+    fold) and the next query is still a dispatch-free hit."""
+    spec = C.MultiSketchSpec(objectives=_objectives(2), seed=14)
+    keys, w = _data(n=900, seed=14)
+    eng = SegmentQueryEngine(spec)                        # 1 shard
+    eng.absorb(keys, w)
+    eng._materialize_merged()                             # warm (alias)
+    held = eng.merged                                     # public handout
+    snap = np.asarray(held.keys).copy()
+    eng.absorb(np.arange(70_000, 70_150), np.ones(150, np.float32))
+    with spy_merge_dispatch() as calls:
+        got = eng._materialize_merged()
+    assert calls == {"full": 0, "inc": 0}
+    assert got is eng._shards[0]                          # re-aliased
+    np.testing.assert_array_equal(np.asarray(held.keys), snap)  # survived
+    # oracle: one-shot build over the union
+    want = C.multisketch_build(
+        spec, np.concatenate([keys, np.arange(70_000, 70_150)]),
+        np.concatenate([w, np.ones(150, np.float32)]))
+    _assert_bitsame(got, want, msg="vs one-shot: ")
+
+
+def test_absorb_time_add_shard_keeps_cache_current():
+    """add_shard under a current cache folds the new slab at absorb time
+    — next query hits, bit-identical to the eager union."""
+    spec = C.MultiSketchSpec(objectives=_objectives(2), seed=15)
+    keys, w = _data(n=1100, seed=15)
+    eng = SegmentQueryEngine(spec, shards=2)
+    eng.absorb(keys[::2], w[::2], shard=0)
+    eng.absorb(keys[1::2], w[1::2], shard=1)
+    eng._materialize_merged()
+    other = C.multisketch_build(spec, np.arange(75_000, 75_400),
+                                np.ones(400, np.float32))
+    eng.add_shard(other)
+    with spy_merge_dispatch() as calls:
+        got = eng._materialize_merged()
+    assert calls == {"full": 0, "inc": 0}
+    union = C.multisketch_merge(spec, C.multisketch_build(spec, keys, w),
+                                other)
+    _assert_bitsame(got, union, msg="vs union: ")
+
+
+def test_absorb_time_nonmonotone_falls_back_then_reseeds():
+    """set_shard drops the cache (maintenance can't ride a replaced
+    shard); the next query re-merges fully, and maintenance resumes from
+    the re-seeded cache on the following absorb."""
+    spec = C.MultiSketchSpec(objectives=_objectives(2), seed=16)
+    keys, w = _data(n=800, seed=16)
+    eng = SegmentQueryEngine(spec, shards=2)
+    eng.absorb(keys[::2], w[::2], shard=0)
+    eng.absorb(keys[1::2], w[1::2], shard=1)
+    eng._materialize_merged()
+    repl = C.multisketch_build(spec, np.arange(42_000, 42_200),
+                               np.ones(200, np.float32))
+    eng.set_shard(1, repl)
+    n_at = eng.merge_stats["absorb_time"]
+    eng._materialize_merged()                             # full re-merge
+    assert eng.merge_stats["full"] >= 2
+    eng.absorb(np.arange(43_000, 43_100), np.ones(100, np.float32), shard=0)
+    assert eng.merge_stats["absorb_time"] == n_at + 1     # resumed
+    with spy_merge_dispatch() as calls:
+        got = eng._materialize_merged()
+    assert calls == {"full": 0, "inc": 0}
+    want = C.multisketch_merge(
+        spec,
+        C.multisketch_merge(spec,
+                            C.multisketch_build(spec, keys[::2], w[::2]),
+                            repl),
+        C.multisketch_build(spec, np.arange(43_000, 43_100),
+                            np.ones(100, np.float32)))
+    _assert_bitsame(got, want, msg="vs union: ")
 
 
 # ------------------------------------------------- cluster coords twin

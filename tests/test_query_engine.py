@@ -290,6 +290,46 @@ def test_blocked_buffer_scan_overflow_fallback():
         np.testing.assert_array_equal(np.asarray(g), np.asarray(r))
 
 
+def test_blocked_buffer_scan_tie_eviction_at_capacity():
+    """Ties AT the capacity boundary: an incoming value equal to the
+    buffer tail still inserts (rank counts strictly smaller only) and
+    evicts the old tail, so tail_v repeats while tail_i changes. The
+    blocked scan must reproduce the reference's evict-last choice
+    bit-exactly, including which index the emitted tail carries."""
+    from repro.core.universal import _buffer_scan, _buffer_scan_ref
+    rng = np.random.default_rng(7)
+    # a 4-value alphabet over 1500 draws: the tail is almost always tied
+    v = rng.choice(np.array([1.0, 2.0, 3.0, 4.0], np.float32), 1500)
+    idx = np.arange(1500, dtype=np.int32)
+    for k1 in (3, 17, 64):
+        got = _buffer_scan(jnp.asarray(v), jnp.asarray(idx), k1)
+        want = _buffer_scan_ref(jnp.asarray(v), jnp.asarray(idx), k1)
+        for name, g, r in zip(("rank", "tail_v", "tail_i"), got, want):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(r),
+                                          err_msg=f"k1={k1} {name}")
+    # the emitted tail index must actually churn under ties (the evict
+    # path runs), not just repeat the first tail forever
+    ti = np.asarray(_buffer_scan(jnp.asarray(v), jnp.asarray(idx), 3)[2])
+    assert len(set(ti[np.asarray(v) == 4.0].tolist())) > 1
+
+
+def test_blocked_buffer_scan_all_equal_forces_full_replay():
+    """All-equal values: every rank is 0, the whole stream 'inserts', the
+    inserted-subsequence bound overflows and the lax.cond falls back to
+    the full sequential replay — which must stay exact under total ties."""
+    from repro.core.universal import (_buffer_scan, _buffer_scan_ref,
+                                      _insert_bound)
+    n, k1 = 4096, 9
+    assert _insert_bound(n, k1) < n     # the compressed path CAN'T hold it
+    v = np.full(n, 2.5, np.float32)
+    idx = np.arange(n, dtype=np.int32)
+    got = _buffer_scan(jnp.asarray(v), jnp.asarray(idx), k1)
+    want = _buffer_scan_ref(jnp.asarray(v), jnp.asarray(idx), k1)
+    for name, g, r in zip(("rank", "tail_v", "tail_i"), got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(r),
+                                      err_msg=name)
+
+
 def test_merge_sketches_jit_cached_and_donatable():
     from repro.core.merge import _merge_jit
     rng = np.random.default_rng(1)

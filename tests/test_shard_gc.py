@@ -1,0 +1,242 @@
+"""Shard lifecycle tier: GC/rebalance correctness for the serving engine.
+
+Acceptance (ISSUE 7): a GC merge (cold shards folded into the compacted
+base slab) is BIT-IDENTICAL to keeping the shards separate — the union,
+hence the merged slab and every query answer, never changes; long-running
+churn holds live-shard count and device bytes at O(capacity) under the
+auto water-mark; and crash recovery (checkpoint + WAL replay, including
+the GC marker) lands in the identical post-GC state.
+"""
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.core.multi_sketch import MultiSketch
+from repro.launch.pool import FRESH, REJECTED, EnginePool
+from repro.launch.query import SegmentQueryEngine
+
+from tests.faults import FaultInjector
+
+
+def _spec(seed=0, scheme="ppswor", nf=3):
+    pool = [(C.SUM, 16), (C.COUNT, 8), (C.thresh(2.0), 12), (C.cap(1.5), 8),
+            (C.moment(1.5), 8), (C.thresh(0.5), 8), (C.cap(4.0), 8),
+            (C.moment(0.5), 8)]
+    return C.MultiSketchSpec(objectives=tuple(pool[:nf]), scheme=scheme,
+                             seed=seed)
+
+
+def _chunks(n_chunks, n=120, seed=3, key_space=4000):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(0, key_space, n).astype(np.int32),
+             rng.lognormal(0, 1.2, n).astype(np.float32))
+            for _ in range(n_chunks)]
+
+
+def _assert_bitsame(a: MultiSketch, b: MultiSketch, msg=""):
+    for name, x, y in zip(MultiSketch._fields, a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"{msg}{name}")
+
+
+# ---------------------------------------------------------------------------
+# GC merge == eager union (bit-identity across schemes and |F|)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("scheme", ["ppswor", "priority"])
+@pytest.mark.parametrize("nf", [1, 3, 8])
+def test_gc_merge_equals_eager_union(scheme, nf):
+    """Folding cold shards into the base slab never changes the merged
+    slab: bit-identical to the no-GC engine, any scheme, any |F|."""
+    spec = _spec(seed=7, scheme=scheme, nf=nf)
+    eng = SegmentQueryEngine(spec, shards=5, absorb_time=False)
+    ora = SegmentQueryEngine(spec, shards=5, absorb_time=False)
+    for i, (k, w) in enumerate(_chunks(10, seed=nf)):
+        eng.absorb(k, w, shard=i % 5)
+        ora.absorb(k, w, shard=i % 5)
+    victims = eng.gc(max_live=2)
+    assert victims, "water-mark 2 over 5 live shards must evict"
+    assert eng.merge_stats["live_shards"] <= 2
+    assert eng.merge_stats["gc_merges"] == 1
+    _assert_bitsame(eng.merged, ora.merged, f"{scheme}/nf={nf}: ")
+
+
+def test_gc_preserves_current_cache_and_later_folds():
+    """A current merged cache survives the GC epoch (re-stamped, not
+    re-merged), and post-GC absorbs keep the absorb-time path exact."""
+    spec = _spec(seed=1)
+    eng = SegmentQueryEngine(spec, shards=4, absorb_time=True)
+    ora = SegmentQueryEngine(spec, shards=4, absorb_time=False, max_delta=0)
+    chunks = _chunks(8, seed=11)
+    for i, (k, w) in enumerate(chunks[:5]):
+        eng.absorb(k, w, shard=i % 4)
+        ora.absorb(k, w, shard=i % 4)
+    _assert_bitsame(eng.merged, ora.merged)
+    hits = eng.merge_stats["hit"]
+    assert eng.gc(max_live=2)
+    # cache stayed current across the GC epoch: next query is a hit
+    _assert_bitsame(eng.merged, ora.merged, "post-gc: ")
+    assert eng.merge_stats["hit"] == hits + 1
+    for i, (k, w) in enumerate(chunks[5:]):
+        eng.absorb(k, w, shard=i % 2)
+        ora.absorb(k, w, shard=i % 2)
+        _assert_bitsame(eng.merged, ora.merged, "post-gc absorb: ")
+    assert eng.merge_stats["full"] <= 1  # only the pre-GC bootstrap merge
+
+
+def test_longrun_churn_plateaus_at_water_mark():
+    """Under the auto water-mark, live shards and resident bytes stop
+    growing: O(capacity), not O(stream lifetime)."""
+    spec = _spec(seed=2)
+    eng = SegmentQueryEngine(spec, shards=6, absorb_time=True, gc_max_live=3)
+    ora = SegmentQueryEngine(spec, shards=6, absorb_time=False, max_delta=0)
+    bytes_track, live_track = [], []
+    for i, (k, w) in enumerate(_chunks(30, seed=5)):
+        sh = int(np.random.default_rng(100 + i).integers(0, 6))
+        eng.absorb(k, w, shard=sh)
+        ora.absorb(k, w, shard=sh)
+        bytes_track.append(eng.merge_stats["bytes_resident"])
+        live_track.append(eng.merge_stats["live_shards"])
+    assert eng.merge_stats["gc_merges"] > 0
+    assert max(live_track) <= 6           # never above construction layout
+    assert all(lv <= 3 for lv in live_track[6:]), \
+        "live shards must plateau at the water-mark after warmup"
+    # resident bytes plateau: the second half never exceeds the first
+    assert max(bytes_track[15:]) <= max(bytes_track[:15])
+    _assert_bitsame(eng.merged, ora.merged, "after churn+gc: ")
+
+
+def test_gc_plan_is_deterministic_and_age_ordered():
+    spec = _spec(seed=3)
+    eng = SegmentQueryEngine(spec, shards=5, absorb_time=False)
+    for i, (k, w) in enumerate(_chunks(5, seed=9)):
+        eng.absorb(k, w, shard=i)           # shard i last-touched at epoch i+1
+    assert eng.gc_plan(max_live=2) == eng.gc_plan(max_live=2)
+    # oldest non-base victims first until <= max_live shards stay live
+    assert eng.gc_plan(max_live=2) == [1, 2, 3]
+    assert eng.gc_plan(min_age=3) == [1]
+    assert eng.gc_plan(max_live=99) == []
+
+
+def test_spill_victims_then_restore_bitsame(tmp_path):
+    """gc(spill_dir=...) persists victim slabs through ckpt.manager; a
+    from_checkpoint over the spill directory restores them bit-exactly."""
+    spec = _spec(seed=4)
+    eng = SegmentQueryEngine(spec, shards=4, absorb_time=False)
+    for i, (k, w) in enumerate(_chunks(6, seed=13)):
+        eng.absorb(k, w, shard=i % 4)
+    pre = [eng._shards[i] for i in range(4)]
+    victims = eng.gc(max_live=2, spill_dir=str(tmp_path / "spill"))
+    assert victims
+    restored, meta = SegmentQueryEngine.from_checkpoint(
+        str(tmp_path / "spill"), return_meta=True)
+    assert meta["spilled_from"] == victims
+    for j, v in enumerate(victims):
+        _assert_bitsame(restored._shards[j], pre[v], f"spilled shard {v}: ")
+
+
+# ---------------------------------------------------------------------------
+# pool admin op (gc/compact on the admission loop) + durability
+# ---------------------------------------------------------------------------
+
+def _fast_pool(**kw):
+    kw.setdefault("sleep", lambda s: None)
+    kw.setdefault("backoff_base", 1e-4)
+    return EnginePool(**kw)
+
+
+def test_pool_gc_serves_queries_first_and_labels_gc_epoch():
+    pool = _fast_pool()
+    pool.create_stream("t", _spec(seed=5), shards=4)
+    for i, (k, w) in enumerate(_chunks(6, seed=17)):
+        pool.absorb("t", k, w, shard=i % 4)
+    q = pool.submit("t")
+    g = pool.request_gc("t", max_live=2)
+    pool.pump()
+    rq, rg = q.result(1.0), g.result(1.0)
+    # the query rode the same pump as the admin op and was served first,
+    # against the pre-GC (identical-union) state
+    assert rq.status == FRESH and not rq.gc_epoch
+    assert rg.status == FRESH and rg.gc_epoch and len(rg.gc_victims) >= 1
+    # responses served while the newest epoch is a GC epoch are labeled
+    r2 = pool.query("t")
+    assert r2.status == FRESH and r2.gc_epoch
+    assert pool.stats("t")["gc_epoch"]
+    # the label clears on the next data epoch
+    k, w = _chunks(1, seed=18)[0]
+    pool.absorb("t", k, w, shard=0)
+    assert not pool.query("t").gc_epoch
+
+
+def test_pool_gc_deadline_expires_to_rejected():
+    t = [0.0]
+    pool = _fast_pool(clock=lambda: t[0])
+    pool.create_stream("t", _spec(seed=5), shards=2)
+    fut = pool.request_gc("t", max_live=1, timeout=0.5)
+    t[0] = 1.0
+    pool.pump()
+    r = fut.result(1.0)
+    assert r.status == REJECTED and r.error == "deadline"
+
+
+def test_pool_compact_merges_everything():
+    pool = _fast_pool()
+    pool.create_stream("t", _spec(seed=6), shards=4)
+    for i, (k, w) in enumerate(_chunks(5, seed=19)):
+        pool.absorb("t", k, w, shard=i % 4)
+    r = pool.compact("t")
+    assert r.ok and r.gc_victims
+    assert pool._stream("t").engine.merge_stats["live_shards"] == 1
+
+
+def test_crash_recovery_lands_in_identical_post_gc_state(tmp_path):
+    """Checkpoint + WAL replay (data records AND the GC marker) reproduces
+    the uncrashed engine's post-GC state bit-identically: every shard
+    slab, the shard liveness layout, and the merged slab."""
+    spec = _spec(seed=8)
+    chunks = _chunks(9, seed=23)
+    pool = _fast_pool(durability_dir=str(tmp_path), snapshot_every=4)
+    pool.create_stream("t", spec, shards=4, absorb_time=True, gc_max_live=3)
+    for i, (k, w) in enumerate(chunks[:6]):
+        pool.absorb("t", k, w, shard=i % 4)
+    assert pool.gc("t", max_live=2).ok
+    for i, (k, w) in enumerate(chunks[6:]):
+        pool.absorb("t", k, w, shard=i % 2)
+    live = pool._stream("t").engine
+    pool.close()
+
+    pool2 = EnginePool.open(str(tmp_path), sleep=lambda s: None)
+    rec = pool2._stream("t").engine
+    assert len(rec._shards) == len(live._shards)
+    assert rec._shard_live == live._shard_live
+    for i in range(len(live._shards)):
+        _assert_bitsame(rec._shards[i], live._shards[i], f"shard {i}: ")
+    _assert_bitsame(rec.merged, live.merged, "merged: ")
+    assert rec.merge_stats["live_shards"] == live.merge_stats["live_shards"]
+    pool2.close()
+
+
+def test_lost_gc_marker_keeps_answers_identical(tmp_path):
+    """Apply-then-append: if the crash eats the GC marker, recovery
+    replays into the pre-GC shard layout — whose merged slab (the union)
+    is still bit-identical, so no answer ever changes."""
+    spec = _spec(seed=9)
+    chunks = _chunks(6, seed=29)
+    pool = _fast_pool(durability_dir=str(tmp_path))
+    pool.create_stream("t", spec, shards=4)
+    for i, (k, w) in enumerate(chunks):
+        pool.absorb("t", k, w, shard=i % 4)
+    with FaultInjector().fail_next("wal_append", 1) as inj:
+        r = pool.gc("t", max_live=2)
+    assert inj.fired.get("wal_append", 0) == 1
+    assert r.ok and r.gc_victims      # GC applied...
+    assert r.error and "marker" in r.error  # ...but the directive was lost
+    live_merged = pool._stream("t").engine.merged
+    pool.close()
+
+    pool2 = EnginePool.open(str(tmp_path), sleep=lambda s: None)
+    rec = pool2._stream("t").engine
+    # pre-GC layout (no marker to replay) — all four shards still live
+    assert rec.merge_stats["live_shards"] == 4
+    _assert_bitsame(rec.merged, live_merged, "merged after lost marker: ")
+    pool2.close()
