@@ -634,6 +634,90 @@ def bench_serving_chaos(smoke: bool = False):
             f"rate_hz={rate_hz:g};n={n_req}")
 
 
+def bench_pool_scaleout(smoke: bool = False):
+    """Scale-out PR tentpole: the ``ShardedEnginePool`` (consistent-hash
+    placement over a host group, absorb fan-out, cross-host re-selection
+    reads, replicated last-good slabs) under open-loop load WHILE a
+    seeded schedule kills an owner host mid-stream, followed by a
+    rebalance (checkpoint + WAL rebuild of the dead host's shards).
+    Reports availability = (FRESH + STALE) / reads — the CI scaleout
+    gate asserts >= 0.99 — and ``bitsame``: post-rebalance answers must
+    be BIT-IDENTICAL to a never-failed single-host union engine (=1)."""
+    import tempfile
+
+    from repro.launch.pool import (FRESH, REJECTED, STALE, RejectedError,
+                                   ShardedEnginePool)
+    from repro.launch.query import SegmentQueryEngine
+    from tests.faults import FaultInjector, poisson_arrivals
+
+    n_ops = 60 if smoke else 240
+    rate_hz = 20.0 if smoke else 100.0
+    shards, rows = 16, 128 if smoke else 512
+    kk = 16 if smoke else 64
+    rng = np.random.default_rng(31)
+    spec = C.MultiSketchSpec(objectives=((C.SUM, kk), (C.COUNT, kk)),
+                             seed=0, capacity=4 * kk)
+    with tempfile.TemporaryDirectory() as dur:
+        pool = ShardedEnginePool(hosts=(0, 1, 2, 3), durability_dir=dur,
+                                 pending_limit=1024, sleep=lambda s: None)
+        placement = pool.create_stream("t", spec, shards=shards)
+        twin = SegmentQueryEngine(spec, shards=shards)
+        statuses = {FRESH: 0, STALE: 0, REJECTED: 0}
+        unlabeled = shed = 0
+        lat_ms = []
+        arrivals = poisson_arrivals(rate_hz, n_ops, rng)
+        t0 = time.perf_counter()
+        with FaultInjector(seed=32) as inj:
+            inj.kill_host(pool, placement[0], at=n_ops // 2)
+            for i in range(n_ops):
+                sched = t0 + float(arrivals[i])
+                while True:             # open-loop: hold to the schedule
+                    gap = sched - time.perf_counter()
+                    if gap <= 0:
+                        break
+                    time.sleep(min(gap, 1e-3))
+                sh = int(rng.integers(0, shards))
+                keys = (i * rows + np.arange(rows)).astype(np.int32)
+                w = rng.lognormal(0, 1.5, rows).astype(np.float32)
+                try:
+                    pool.absorb("t", keys, w, shard=sh)
+                except RejectedError:
+                    shed += 1
+                    continue
+                twin.absorb(keys, w, shard=sh)
+                r = pool.query("t", timeout=2.0)
+                statuses[r.status] += 1
+                lat_ms.append((time.perf_counter() - sched) * 1e3)
+                if r.status == FRESH:
+                    if (r.epoch_lag != 0 or not np.array_equal(
+                            r.values, twin.query_many())):
+                        unlabeled += 1  # FRESH must be the exact truth
+                elif r.status == STALE:
+                    if r.values is None or (r.epoch_lag == 0
+                                            and r.error is None):
+                        unlabeled += 1  # degraded must be labeled
+        # recovery: re-partition around the dead host, answers exact again
+        reb_t0 = time.perf_counter()
+        out = pool.rebalance("t")["t"]
+        reb_ms = (time.perf_counter() - reb_t0) * 1e3
+        r = pool.query("t")
+        bitsame = int(r.status == FRESH and out["error"] is None
+                      and np.array_equal(r.values, twin.query_many()))
+        pool.close()
+    reads = sum(statuses.values())
+    avail = (statuses[FRESH] + statuses[STALE]) / max(reads, 1)
+    lat = np.asarray(lat_ms)
+    _record("pool_scaleout", float(np.percentile(lat, 95)) * 1e3,
+            f"availability={avail:.4f};bitsame={bitsame};"
+            f"unlabeled={unlabeled};fresh={statuses[FRESH]};"
+            f"stale={statuses[STALE]};rejected={statuses[REJECTED]};"
+            f"shed={shed};moved={len(out['moved'])};"
+            f"rebalance_ms={reb_ms:.1f};"
+            f"p50_ms={np.percentile(lat, 50):.2f};"
+            f"p95_ms={np.percentile(lat, 95):.2f};"
+            f"hosts=4;shards={shards};rate_hz={rate_hz:g};n={n_ops}")
+
+
 def bench_dryrun_roofline_summary():
     """Ties to EXPERIMENTS.md §Roofline: summarize dry-run artifacts."""
     import glob
@@ -691,6 +775,7 @@ def _registry(smoke: bool):
         ("shard_gc", partial(bench_shard_gc, **s), True),
         ("roofline", bench_roofline_fold_model, True),
         ("serving_chaos", partial(bench_serving_chaos, **s), True),
+        ("pool_scaleout", partial(bench_pool_scaleout, **s), True),
         ("gradient_compression", bench_gradient_compression, True),
         ("multiobj_scaling", bench_multiobj_scaling, False),
         ("dryrun_roofline_summary", bench_dryrun_roofline_summary, True),

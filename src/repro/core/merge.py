@@ -191,6 +191,41 @@ degrade WITHOUT becoming wrong. Its rules:
     makes them indistinguishable from ``pad_chunk`` padding: the slab is
     bit-identical to one that absorbed only the clean rows, and the
     quarantine count is surfaced per absorb receipt and per stream.
+
+SCALE-OUT CONTRACT (launch.pool.ShardedEnginePool): the multi-host tier
+adds machine loss and re-partitioning on top of the ladder above, still
+without a fourth answer state. Its rules:
+
+  * cross-host exactness — shards are placed by rendezvous hash over the
+    host group; each owner folds its shards locally and a read merges the
+    per-host MERGED slabs through the same shared fold family as a
+    single-host engine (composability is transitive through intermediate
+    merges, paper §3.3, and compaction is deterministic in the retained
+    multiset) — so the group answer is BIT-IDENTICAL to a never-sharded
+    union engine over the same records, not merely unbiased.
+  * REBALANCE markers — a re-partition applies the shard hand-offs
+    first, THEN appends one REBALANCE marker (launch.wal, shard == -2)
+    whose payload is the FULL new placement: the same apply-then-append
+    discipline as GC markers. Replay dispatches markers in sequence
+    order, so recovery lands every record on the owner the marker
+    recorded; a marker lost or torn by a crash merely recovers the
+    PRE-move placement — a different partition of the SAME union, whose
+    merged answers are bit-identical (merging exactness above). Dead
+    hosts' shards are rebuilt from newest intact checkpoint + full WAL
+    tail (GC markers included — GC moves mass across shards, so a
+    filtered replay would be wrong).
+  * replica promotion — every FRESH answer's merged slab is copied, with
+    its applied sequence, to the top-2 rendezvous-ranked live hosts for
+    the stream. When an owner dies, reads fall back to the newest
+    surviving replica at STALE with ``epoch_lag`` = acks since that
+    slab; losing every replica holder is REJECTED, never a guess.
+    Accepted-but-unappliable chunks stay WAL-durable in a bounded
+    pending backlog (sheds at ``pending_limit``) and fold on rebalance.
+    The cluster tier mirrors this with ``ClusterEngine.handoff``: the
+    replica carries the FROZEN anchor normalizers, so a promoted
+    follower keeps absorbing sample-coordinated with the source, bit
+    for bit — re-deriving anchors on promotion would silently decouple
+    the samples.
 """
 from __future__ import annotations
 

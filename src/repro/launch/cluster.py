@@ -91,6 +91,21 @@ def _align_coords_delta(new_keys, old_keys, old_coords, chunk_keys,
     return jnp.where(same[:, None], old_coords, looked)
 
 
+class ClusterReplica(NamedTuple):
+    """Portable snapshot of a ClusterEngine's resident state (deep
+    copies): the hand-off unit of the scale-out replication contract —
+    see ``ClusterEngine.handoff``."""
+
+    sketch: object            # MultiSketch slab
+    coords: object            # [cap, dim] aligned coords
+    anchor_coords: object     # frozen anchors (None pre-first-absorb)
+    eps: object               # frozen distance regularizer
+    norm: object              # frozen per-anchor column sums
+    next_key: int
+    epoch: int
+    config: dict              # constructor kwargs of the source engine
+
+
 class ClusterEngine:
     """Resident sampled point slab + fused batched service-cost queries.
 
@@ -219,6 +234,51 @@ class ClusterEngine:
         return float(jnp.sum(jnp.where(
             self._sketch.member,
             1.0 / jnp.maximum(self._sketch.probs, 1e-30), 0.0)))
+
+    # -- replica hand-off (scale-out follower promotion) ---------------------
+    def handoff(self) -> "ClusterReplica":
+        """Deep-copied portable replica of the resident state — the
+        cluster tier's leg of the scale-out replication contract
+        (launch.pool.ShardedEnginePool): ship it to a follower host and
+        ``from_handoff`` promotes it to a serving engine.
+
+        The FROZEN anchor normalizers (anchor coords, eps, per-anchor
+        column sums) ride along with the slab: they are what keep ppswor
+        seeds comparable across chunks, so a follower promoted WITHOUT
+        them would re-freeze its own normalization on its first chunk and
+        silently break sample coordination (arXiv 0906.4560) with every
+        other replica of this stream. With them, the promoted engine
+        serves bit-identical ``service_costs`` AND keeps absorbing
+        bit-identically to the source."""
+        cp = lambda x: None if x is None else jnp.copy(x)  # noqa: E731
+        return ClusterReplica(
+            sketch=jax.tree.map(jnp.copy, self._sketch),
+            coords=jnp.copy(self._coords),
+            anchor_coords=cp(self._anchor_coords),
+            eps=cp(self._eps), norm=cp(self._norm),
+            next_key=self._next_key, epoch=self._epoch,
+            config={"dim": self.dim, "k": self.k, "mu": self.mu,
+                    "n_anchors": self.n_anchors,
+                    "scheme": self.spec.scheme, "seed": self.spec.seed,
+                    "chunk": self.chunk, "q_quantum": self.q_quantum,
+                    "q_max": self.q_max})
+
+    @classmethod
+    def from_handoff(cls, replica: "ClusterReplica",
+                     use_kernels: Optional[bool] = None) -> "ClusterEngine":
+        """Promote a handed-off replica to a serving engine (follower
+        promotion). See ``handoff`` for the coordination contract."""
+        eng = cls(use_kernels=use_kernels, **replica.config)
+        eng._sketch = jax.tree.map(jnp.copy, replica.sketch)
+        eng._coords = jnp.copy(replica.coords)
+        cp = lambda x: None if x is None else jnp.copy(x)  # noqa: E731
+        eng._anchor_coords = cp(replica.anchor_coords)
+        eng._eps = cp(replica.eps)
+        eng._norm = cp(replica.norm)
+        eng._next_key = int(replica.next_key)
+        eng._epoch = int(replica.epoch)
+        eng._update_gauges()
+        return eng
 
     # -- fused batched queries ---------------------------------------------
     def service_costs(self, queries) -> np.ndarray:

@@ -268,6 +268,35 @@ class SegmentQueryEngine:
         self._drop_merged_cache()
         self._update_gauges()
 
+    def shard_slab(self, shard: int) -> MultiSketch:
+        """Shard ``shard``'s resident slab, by REFERENCE — the hand-off
+        read half: a scale-out rebalance moves a shard between hosts as
+        ``target.set_shard(s, source.shard_slab(s))`` (the receiving
+        ``set_shard`` copies, so the transfer is a bit-exact snapshot)
+        then ``source.clear_shard(s)``. Callers who hold the reference
+        past this engine's next mutation of the shard must copy it first:
+        a later absorb donates the resident buffers."""
+        return self._shards[shard]
+
+    def shard_live(self, shard: int) -> bool:
+        """Whether ``shard`` holds data (False: parked on the inert empty
+        slab — never absorbed into, GC'd away, or handed off)."""
+        return bool(self._shard_live[shard])
+
+    def clear_shard(self, shard: int):
+        """Park one shard back on the shared inert slab — the hand-off
+        release half (see ``shard_slab``): after the receiving host has
+        copied the slab in, the source host drops its residency so the
+        shard is owned exactly once across the group. NON-MONOTONE (the
+        shard's contribution leaves this engine's union), so the cached
+        merged slab is dropped — next query takes the full path."""
+        self._shards[shard] = self._empty
+        self._epoch += 1
+        self._shard_epochs[shard] = self._epoch
+        self._shard_live[shard] = False
+        self._drop_merged_cache()
+        self._update_gauges()
+
     def add_shard(self, sketch: MultiSketch):
         """Append a prebuilt slab as a NEW shard (copied in, like
         ``set_shard``) — cross-job fan-in: slabs restored from another

@@ -96,6 +96,31 @@ def sharded_multisketch_shards(spec: MultiSketchSpec, mesh, keys, weights,
     return jax.jit(fn)(keys, weights, active)
 
 
+def merge_host_slabs(spec: MultiSketchSpec, slabs,
+                     use_kernels: Optional[bool] = None) -> MultiSketch:
+    """Step 3 for HOST-level slabs: one stacked re-selection over a list
+    of already-merged per-host slabs — the cross-host read path of the
+    scale-out pool (launch.pool.ShardedEnginePool).
+
+    Exactness is the same threshold-closure argument as the mesh build
+    above: each host's merged slab is S^(F) ∪ Z of that host's shard
+    union, and one re-selection over the stacked host slabs recovers the
+    sample of the GLOBAL union (paper §3.3 — composability is transitive
+    through intermediate merges). Bit-identity with a single-host engine
+    over the same data holds because this routes through the engine's own
+    fold family (``launch.query._full_remerge``: the stacked delta fold
+    into a fresh empty slab + the canonical fixed-shape finalizer), so no
+    separately-jitted program can disagree in the last ulp of ``probs``.
+    """
+    slabs = list(slabs)
+    if not slabs:
+        raise ValueError("merge_host_slabs needs >= 1 host slab")
+    if len(slabs) == 1:
+        return slabs[0]
+    from repro.launch.query import _full_remerge
+    return _full_remerge(slabs, spec=spec, use_kernels=use_kernels)
+
+
 def multisketch_shape(spec: MultiSketchSpec) -> MultiSketch:
     """ShapeDtypeStruct pytree of a sketch (for out_specs/eval_shape)."""
     c, nf = spec.cap, spec.nf

@@ -23,16 +23,25 @@ mismatch, non-increasing seq): a torn tail — the expected crash artifact —
 silently yields every complete record before it; mid-file corruption is
 treated the same way (conservative: the seq chain past it is suspect).
 
-GC markers: a record with ``shard == GC_SHARD`` (-1) is a shard-GC
-directive, not data — its ``keys`` payload holds the VICTIM shard
-indices (int32) the engine merged into its base slab; weights/active are
-padding. The pool appends the marker AFTER a successful ``gc_apply``
-(apply-then-append: a crash between the two loses only the GC directive,
-never data, and the merged union — hence every query answer — is
-identical either way), and recovery replays it as
-``engine.gc_apply(keys)`` so the restored shard layout matches the
-uncrashed engine's exactly. Replay of data records must therefore
-dispatch on the shard sign.
+Control markers: a record with a NEGATIVE ``shard`` is a directive, not
+data — replay must dispatch on the shard tag. Two kinds:
+
+  * GC markers (``shard == GC_SHARD``, -1): the ``keys`` payload holds
+    the VICTIM shard indices (int32) the engine merged into its base
+    slab; weights/active are padding. The pool appends the marker AFTER
+    a successful ``gc_apply`` (apply-then-append: a crash between the
+    two loses only the GC directive, never data, and the merged union —
+    hence every query answer — is identical either way), and recovery
+    replays it as ``engine.gc_apply(keys)`` so the restored shard layout
+    matches the uncrashed engine's exactly.
+  * REBALANCE markers (``shard == REBALANCE_SHARD``, -2): the ``keys``
+    payload holds the COMPLETE shard->host placement (keys[i] = owner
+    host id of global shard i) a ``ShardedEnginePool`` re-partition
+    moved to. Same apply-then-append discipline: recovery replays data +
+    GC + rebalance markers in seq order and lands in the identical
+    post-move layout, while a marker lost to a crash merely recovers the
+    PRE-move placement — whose merged union, hence every answer, is
+    bit-identical (launch.pool docstring, core.merge contract).
 """
 from __future__ import annotations
 
@@ -45,6 +54,7 @@ import numpy as np
 
 _MAGIC = b"MOW1"
 GC_SHARD = -1                  # marker record: keys = GC victim indices
+REBALANCE_SHARD = -2           # marker record: keys = shard->host placement
 _HEADER = struct.Struct("<4sQiiI")
 _BODY = struct.Struct("<QiI")  # the crc-covered header fields (seq, shard, n)
 _MAX_ROWS = 1 << 24            # frame sanity bound (rejects garbage lengths)
@@ -77,39 +87,96 @@ class WriteAheadLog:
         d = os.path.dirname(path)
         if d:
             os.makedirs(d, exist_ok=True)
+        existed = os.path.exists(path)
         self._f = open(path, "ab")
+        # highest intact seq, maintained incrementally: a brand-new/empty
+        # log is known-0; an adopted non-empty log is unknown until the
+        # first ``last_seq`` scan. ``append``/``prune`` keep it current so
+        # steady-state ``last_seq`` never re-reads the file.
+        self._last_seq: Optional[int] = 0 if self._f.tell() == 0 else None
+        if not existed:
+            # the file's first durability point: fsync the PARENT DIRECTORY
+            # too, or a crash right after the first fsync'd ``append`` can
+            # lose the directory entry — frame durable, file unreachable
+            # (``prune`` already does this after its os.replace)
+            if self.fsync:
+                self._fsync_dir()
 
-    # ------------------------------------------------------------- write
-    def append(self, seq: int, shard: int, keys, weights, active):
-        """Durably append one chunk record (fsync before returning — the
-        write-ahead guarantee: once ``absorb`` acks, the chunk survives a
-        crash even if its device fold never ran)."""
-        self._f.write(_frame(int(seq), int(shard), keys, weights, active))
-        self._f.flush()
-        if self.fsync:
-            os.fsync(self._f.fileno())
-
-    def prune(self, min_seq_exclusive: int):
-        """Atomically rewrite the log keeping records with
-        seq > ``min_seq_exclusive`` — called after a checkpoint snapshot so
-        the log stays O(data since the oldest RETAINED snapshot), never
-        O(stream lifetime)."""
-        keep = [r for r in self.replay() if r.seq > min_seq_exclusive]
-        tmp = self.path + ".tmp"
-        with open(tmp, "wb") as f:
-            for r in keep:
-                f.write(_frame(r.seq, r.shard, r.keys, r.weights, r.active))
-            f.flush()
-            os.fsync(f.fileno())
-        self._f.close()
-        os.replace(tmp, self.path)
+    def _fsync_dir(self):
         d = os.path.dirname(self.path) or "."
         fd = os.open(d, os.O_RDONLY)
         try:
             os.fsync(fd)
         finally:
             os.close(fd)
+
+    # ------------------------------------------------------------- write
+    def append(self, seq: int, shard: int, keys, weights, active):
+        """Durably append one chunk record (fsync before returning — the
+        write-ahead guarantee: once ``absorb`` acks, the chunk survives a
+        crash even if its device fold never ran)."""
+        if self._f is None:
+            raise ValueError(
+                f"append(seq={seq}) on closed WAL {self.path!r} — the log "
+                f"was close()d; reopen with WriteAheadLog(path)")
+        seq = int(seq)
+        self._f.write(_frame(seq, int(shard), keys, weights, active))
+        self._f.flush()
+        if self.fsync:
+            os.fsync(self._f.fileno())
+        if self._last_seq is not None:
+            if seq > self._last_seq:
+                self._last_seq = seq
+            else:
+                # non-increasing append breaks the replay seq chain at an
+                # earlier frame — the cached value no longer tracks it
+                self._last_seq = None
+
+    def prune(self, min_seq_exclusive: int):
+        """Atomically rewrite the log keeping records with
+        seq > ``min_seq_exclusive`` — called after a checkpoint snapshot so
+        the log stays O(data since the oldest RETAINED snapshot), never
+        O(stream lifetime).
+
+        Streaming frame copy: each frame is validated (magic/length/crc/
+        seq chain — the ``replay`` acceptance rules) and its RAW BYTES
+        written through, one frame in memory at a time — pruning a
+        near-full log is O(frame) memory, never O(log), and the retained
+        bytes are identical to the source frames."""
+        if self._f is None:
+            raise ValueError(f"prune() on closed WAL {self.path!r}")
+        self._f.flush()
+        tmp = self.path + ".tmp"
+        last_seq = 0
+        last_kept = 0
+        with open(self.path, "rb") as src, open(tmp, "wb") as dst:
+            while True:
+                head = src.read(_HEADER.size)
+                if len(head) < _HEADER.size:
+                    break                    # EOF or torn header
+                magic, seq, shard, n, crc = _HEADER.unpack(head)
+                if magic != _MAGIC or not (0 <= n <= _MAX_ROWS):
+                    break                    # corrupt frame
+                payload = src.read(9 * n)
+                if len(payload) < 9 * n:
+                    break                    # torn payload
+                if zlib.crc32(_BODY.pack(seq, shard, n) + payload) \
+                        & 0xFFFFFFFF != crc:
+                    break                    # bit rot / torn write
+                if seq <= last_seq:
+                    break                    # seq chain broken
+                last_seq = seq
+                if seq > min_seq_exclusive:
+                    dst.write(head)
+                    dst.write(payload)
+                    last_kept = seq
+            dst.flush()
+            os.fsync(dst.fileno())
+        self._f.close()
+        os.replace(tmp, self.path)
+        self._fsync_dir()
         self._f = open(self.path, "ab")
+        self._last_seq = last_kept
 
     def close(self):
         if self._f is not None:
@@ -120,7 +187,8 @@ class WriteAheadLog:
     def replay(self, min_seq_exclusive: int = 0) -> Iterator[WalRecord]:
         """Yield intact records in order, stopping at the first torn or
         corrupt frame. Safe on a live log (reads a separate handle)."""
-        self._f.flush()
+        if self._f is not None:
+            self._f.flush()
         last_seq = 0
         with open(self.path, "rb") as f:
             while True:
@@ -148,8 +216,13 @@ class WriteAheadLog:
                 yield WalRecord(seq, shard, keys, weights, active)
 
     def last_seq(self) -> int:
-        """Highest intact sequence number (0 when empty)."""
-        seq = 0
-        for r in self.replay():
-            seq = r.seq
-        return seq
+        """Highest intact sequence number (0 when empty). Cached: computed
+        by one replay scan at most once per adopted log, then maintained
+        incrementally by ``append``/``prune`` — steady-state calls never
+        re-read the file."""
+        if self._last_seq is None:
+            seq = 0
+            for r in self.replay():
+                seq = r.seq
+            self._last_seq = seq
+        return self._last_seq

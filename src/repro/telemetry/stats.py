@@ -148,3 +148,29 @@ class StatsCollector:
     def sketch(self) -> MultiSketch:
         """The wire-format state (e.g. for all_gather / checkpointing)."""
         return self.state
+
+
+def collect_host_gauges(pool) -> dict:
+    """Scale-out telemetry rows for a ``launch.pool.ShardedEnginePool``:
+    per-host residency/health gauges under the same ``merge_stats`` wire
+    names as ``StatsCollector.stats`` and the stream stats (so one export
+    pipeline carries collector, stream and host rows), plus group totals.
+
+    Returns ``{"hosts": {host_id: row}, "totals": row}`` where each row
+    carries ``live_shards`` / ``bytes_resident`` / ``gc_merges`` summed
+    over the host's resident engines and the scale-out extras (``alive``,
+    ``owned_shards``, ``replica_streams``). Totals count LIVE hosts only —
+    a dead host's residency is gone, and exporting it would overstate the
+    group's footprint. Host-side gauges throughout: no device sync."""
+    hosts = pool.host_stats()
+    totals = {"hosts": len(hosts),
+              "hosts_alive": sum(1 for r in hosts.values() if r["alive"]),
+              "live_shards": 0, "bytes_resident": 0, "gc_merges": 0,
+              "owned_shards": 0, "replica_streams": 0}
+    for row in hosts.values():
+        if not row["alive"]:
+            continue
+        for k in ("live_shards", "bytes_resident", "gc_merges",
+                  "owned_shards", "replica_streams"):
+            totals[k] += row[k]
+    return {"hosts": hosts, "totals": totals}

@@ -6,7 +6,10 @@ the ``serving_chaos`` benchmark (benchmarks/run.py). Three layers:
   * :class:`FaultInjector` — deterministic failure schedules installed on
     the ``EnginePool`` fault points (launch.pool.FAULT_POINTS): fail the
     next N calls, fail forever, fail specific call indices, or fail with
-    seeded probability — per point, optionally per stream;
+    seeded probability — per point, optionally per stream — plus
+    ``kill_host`` schedules that drop a scale-out host at an exact
+    ``host_op`` call index (the machine-loss fault, tests/test_pool_
+    scaleout.py);
   * corruption generators — :func:`corrupt_checkpoint` (the 5-mode
     checkpoint damage matrix) and :func:`tear_wal` (torn final write);
   * :func:`poisson_arrivals` — the open-loop load generator (latency is
@@ -78,6 +81,20 @@ class FaultInjector:
         self._plans.pop(point, None)
         return self
 
+    def kill_host(self, pool, hid: int, at: int = 0,
+                  point: str = "host_op",
+                  stream: Optional[str] = None) -> "FaultInjector":
+        """Kill one scale-out host at the ``at``-th matching call of
+        ``point`` (0-based) — the deterministic host-loss schedule.
+        Unlike the failure kinds this does NOT raise: it calls
+        ``pool.kill_host(hid)`` and lets the interrupted operation fail
+        (or survive) exactly as a real machine loss would — the pool sees
+        ``HostDownError`` / pending backlog, never a synthetic exception.
+        One-shot: later matching calls are no-ops."""
+        self._plans[point] = {"kind": "kill", "pool": pool, "hid": int(hid),
+                              "at": int(at), "stream": stream}
+        return self
+
     # -- hook plumbing -------------------------------------------------------
     def _hook(self, point: str):
         def fire(stream: str):
@@ -85,10 +102,19 @@ class FaultInjector:
             plan = self._plans.get(point)
             if plan is None:
                 return
-            if plan["stream"] is not None and plan["stream"] != stream:
+            if (plan["stream"] is not None
+                    and plan["stream"] != stream
+                    # host_op labels are "<stream>@h<hid>" — match on the
+                    # stream half so schedules can target one tenant
+                    and plan["stream"] != stream.split("@")[0]):
                 return
             idx = self.calls[point] - 1
             kind = plan["kind"]
+            if kind == "kill":
+                if idx == plan["at"]:
+                    self.fired[point] = self.fired.get(point, 0) + 1
+                    plan["pool"].kill_host(plan["hid"])
+                return
             hit = (kind == "always"
                    or (kind == "next" and plan["n"] > 0)
                    or (kind == "calls" and idx in plan["set"])

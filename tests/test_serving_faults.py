@@ -374,6 +374,141 @@ def test_wal_prune_keeps_tail(tmp_path):
     assert [r.seq for r in wal.replay()] == [5, 6, 7, 8]
 
 
+def test_wal_prune_streams_frames_and_is_byte_identical(tmp_path):
+    """Regression (multi-MB log): prune must copy surviving frames
+    through VERBATIM — the post-prune file is byte-identical to a log
+    that only ever contained the kept records — and must stream frame
+    by frame, never materializing decoded records (no replay())."""
+    rng = np.random.default_rng(0)
+    n_frames, rows = 160, 4096            # ~5.6 MB of payload
+    frames = []
+    for seq in range(1, n_frames + 1):
+        frames.append((seq, seq % 8,
+                       rng.integers(0, 1 << 30, rows).astype(np.int32),
+                       rng.random(rows).astype(np.float32),
+                       rng.random(rows) < 0.9))
+    path = str(tmp_path / "big.log")
+    wal = WriteAheadLog(path, fsync=False)
+    for f in frames:
+        wal.append(*f)
+    assert os.path.getsize(path) > 4 << 20
+    cut = n_frames // 2
+    # prune is a streaming frame copy: decoding records would be O(log)
+    # memory, so replay() must never run underneath it
+    real_replay = WriteAheadLog.replay
+    WriteAheadLog.replay = lambda *a, **k: (_ for _ in ()).throw(
+        AssertionError("prune materialized records via replay()"))
+    try:
+        wal.prune(cut)
+    finally:
+        WriteAheadLog.replay = real_replay
+    wal.close()
+    ref_path = str(tmp_path / "ref.log")
+    ref = WriteAheadLog(ref_path, fsync=False)
+    for f in frames[cut:]:
+        ref.append(*f)
+    ref.close()
+    with open(path, "rb") as a, open(ref_path, "rb") as b:
+        assert a.read() == b.read()       # bytes, not just records
+    got = list(WriteAheadLog(path).replay())
+    assert [r.seq for r in got] == list(range(cut + 1, n_frames + 1))
+
+
+def test_wal_create_fsyncs_parent_directory(tmp_path, monkeypatch):
+    """Regression: a freshly created WAL file must fsync its parent
+    directory, or a crash can lose the FILE (and with it every durable=
+    True ack) even though each append fsync'd the data."""
+    import stat
+    dir_syncs = []
+    real_fsync = os.fsync
+
+    def spy(fd):
+        if stat.S_ISDIR(os.fstat(fd).st_mode):
+            dir_syncs.append(fd)
+        return real_fsync(fd)
+
+    monkeypatch.setattr(os, "fsync", spy)
+    path = str(tmp_path / "w.log")
+    wal = WriteAheadLog(path)             # creates the file
+    assert len(dir_syncs) == 1
+    wal.append(1, 0, np.arange(4, dtype=np.int32),
+               np.ones(4, np.float32), np.ones(4, bool))
+    wal.close()
+    WriteAheadLog(path).close()           # reopen: no new entry to persist
+    assert len(dir_syncs) == 1
+    WriteAheadLog(str(tmp_path / "w2.log"), fsync=False).close()
+    assert len(dir_syncs) == 1            # fsync=False opts out entirely
+
+
+def test_wal_last_seq_cached_and_survives_append_and_prune(tmp_path):
+    """Regression: last_seq() used to rescan the whole log on every
+    absorb. It must scan at most once per open, track appends
+    incrementally, and stay correct across prune."""
+    path = str(tmp_path / "w.log")
+    wal = WriteAheadLog(path)
+    for seq in range(1, 6):
+        wal.append(seq, 0, np.arange(4, dtype=np.int32),
+                   np.ones(4, np.float32), np.ones(4, bool))
+    wal.close()
+
+    scans = []
+    real_replay = WriteAheadLog.replay
+
+    def spy(self, *a, **k):
+        scans.append(1)
+        return real_replay(self, *a, **k)
+
+    WriteAheadLog.replay = spy
+    try:
+        wal = WriteAheadLog(path)         # existing log: seq unknown
+        assert wal.last_seq() == 5 and len(scans) == 1
+        assert wal.last_seq() == 5 and len(scans) == 1   # cached
+        wal.append(6, 0, np.arange(4, dtype=np.int32),
+                   np.ones(4, np.float32), np.ones(4, bool))
+        assert wal.last_seq() == 6 and len(scans) == 1   # incremental
+        wal.prune(3)                      # rewrite keeps the cache honest
+        assert wal.last_seq() == 6 and len(scans) == 1
+        wal.close()
+    finally:
+        WriteAheadLog.replay = real_replay
+    # a NEW empty log never needs a scan at all
+    scans.clear()
+    WriteAheadLog.replay = spy
+    try:
+        w2 = WriteAheadLog(str(tmp_path / "new.log"))
+        assert w2.last_seq() == 0 and not scans
+        w2.close()
+    finally:
+        WriteAheadLog.replay = real_replay
+
+
+def test_wal_append_after_close_raises_explicit_error(tmp_path):
+    wal = WriteAheadLog(str(tmp_path / "w.log"))
+    wal.close()
+    with pytest.raises(ValueError, match="closed WAL"):
+        wal.append(1, 0, np.arange(4, dtype=np.int32),
+                   np.ones(4, np.float32), np.ones(4, bool))
+
+
+def test_zero_timeout_sheds_queries_and_admin_under_frozen_clock():
+    """Regression: with deadline = now + 0 and a clock that does not
+    advance between submit and pump, the old strict `>` check served a
+    zero-budget request instead of shedding it. timeout=0 must be
+    REJECTED/"deadline" for BOTH queries and admin ops."""
+    t = [100.0]
+    pool = _fast_pool(clock=lambda: t[0])
+    pool.create_stream("t", _spec())
+    for keys, w in _chunks(2):
+        pool.absorb("t", keys, w)
+    r = pool.query("t", timeout=0)
+    assert r.status == REJECTED and r.error == "deadline"
+    r = pool.gc("t", timeout=0)
+    assert r.status == REJECTED and r.error == "deadline"
+    # a real budget under the same frozen clock still serves
+    assert pool.query("t", timeout=5.0).status == FRESH
+    assert pool.compact("t", timeout=5.0).status == FRESH
+
+
 def test_crash_recovery_bit_identical(tmp_path):
     chunks = _chunks(10)
     spec = _spec(seed=7)
